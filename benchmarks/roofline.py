@@ -1,0 +1,92 @@
+"""§Roofline: per-(arch x shape x mesh) roofline terms from the dry-run
+artifacts + the analytic model, dominant-bottleneck identification, and
+the MODEL_FLOPS / HLO_FLOPs usefulness ratio.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+    (writes the markdown table printed on stdout; EXPERIMENTS.md embeds it)
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+from repro.core.hw_specs import TPU_V5E
+from repro.core.tpu_model import (MeshDesc, analytic_roofline, hlo_roofline,
+                                  model_flops)
+
+
+def load_cells(d: str) -> list[dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def roofline_rows(cells: list[dict]) -> list[dict]:
+    rows = []
+    for c in cells:
+        if c.get("status") != "ok" or "single" not in c.get("mesh", ""):
+            continue  # roofline table is single-pod per spec
+        cfg = get_config(c["arch"])
+        shape = SHAPES[c["shape"]]
+        mesh = MeshDesc.single_pod()
+        hlo = hlo_roofline(c["exact"])
+        ana = analytic_roofline(cfg, shape, mesh)
+        # memory term: the analytic model (HLO operand bytes on the CPU
+        # backend are inflated by unfused materialization; TPU fuses);
+        # compute/collective terms: measured from the compiled HLO.
+        from repro.core.tpu_model import Roofline
+        mixed = Roofline(hlo.t_compute, ana.t_memory, hlo.t_collective)
+        mf = model_flops(cfg, shape)
+        hlo_flops_total = c["exact"]["flops"] * mesh.n_chips
+        useful = mf / hlo_flops_total if hlo_flops_total else 0.0
+        # roofline fraction: useful-compute time over the binding term
+        t_useful = mf / mesh.n_chips / TPU_V5E.peak_flops
+        frac = t_useful / mixed.step_time if mixed.step_time else 0.0
+        frac = min(frac, 1.0)
+        rows.append({
+            "arch": c["arch"], "shape": c["shape"], "mesh": c["mesh"],
+            "t_compute": mixed.t_compute, "t_memory": mixed.t_memory,
+            "t_collective": mixed.t_collective, "bound": mixed.bound,
+            "ana_compute": ana.t_compute, "ana_memory": ana.t_memory,
+            "ana_collective": ana.t_collective, "ana_bound": ana.bound,
+            "model_flops": mf, "hlo_flops_per_dev": c["exact"]["flops"],
+            "useful_ratio": useful, "roofline_frac": frac,
+            "mem_gib_per_dev": c["memory"]["total_per_device"] / 2 ** 30,
+            "compile_s": c.get("compile_s", 0.0),
+        })
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | t_comp(s) | t_mem(s) | t_coll(s) | bound | "
+           "useful=MODEL/HLO | roofline-frac | mem/dev (GiB) |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.3g} | "
+            f"{r['t_memory']:.3g} | {r['t_collective']:.3g} | {r['bound']} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_frac']:.3f} | "
+            f"{r['mem_gib_per_dev']:.1f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    rows = roofline_rows(load_cells(args.dir))
+    print(markdown_table(rows))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

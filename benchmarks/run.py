@@ -1,0 +1,189 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Each benchmark returns rows ``{name, us_per_call, derived}`` where
+``derived`` holds the headline metric(s) the paper's table/figure reports;
+``main`` prints one CSV line per row:  name,us_per_call,derived.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig11]
+"""
+from __future__ import annotations
+
+import argparse
+import statistics
+import time
+
+from repro.core import (KU115, ZCU102, PSOConfig, dnnbuilder_design, explore,
+                        generic_only_design)
+from repro.core.local_opt import dpu_proxy_design
+from repro.core.netinfo import INPUT_CASES, TABLE1_NETS, vgg16
+
+from . import paper_data as paper
+
+_CFG = PSOConfig(population=20, iterations=30, seed=1)
+
+
+def _timed(fn, *a, **kw):
+    t0 = time.perf_counter()
+    out = fn(*a, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def bench_fig1_ctc() -> list[dict]:
+    """Fig. 1: CTC medians of VGG16 over the 12 input sizes."""
+    rows = []
+    for h, w in INPUT_CASES:
+        net, us = _timed(vgg16, h, w)
+        med = statistics.median(net.ctc_list())
+        rows.append({"name": f"fig1_ctc_{h}x{w}", "us_per_call": us,
+                     "derived": f"median_ctc={med:.0f}"})
+    m32 = statistics.median(vgg16(32).ctc_list())
+    m512 = statistics.median(vgg16(512).ctc_list())
+    rows.append({"name": "fig1_ctc_scaling_32_to_512", "us_per_call": 0.0,
+                 "derived": f"ratio={m512 / m32:.1f}x(paper~256x)"})
+    return rows
+
+
+def bench_table1_variance() -> list[dict]:
+    """Table 1: V1/V2 CTC variance ratio per network."""
+    rows = []
+    for name, fn in TABLE1_NETS.items():
+        net, us = _timed(fn)
+        r = net.half_variance_ratio()
+        rows.append({"name": f"table1_{name}", "us_per_call": us,
+                     "derived": f"v1_over_v2={r:.1f}"
+                                f"(paper={paper.TABLE1[name]})"})
+    return rows
+
+
+def bench_fig9_dsp_efficiency() -> list[dict]:
+    """Fig. 9: DSP efficiency across the input cases; DNNExplorer vs the
+    analytical paradigm-A baselines (HybridDNN / DPU proxies)."""
+    rows = []
+    for h, w in INPUT_CASES[:9]:
+        net = vgg16(h, w)
+        res, us = _timed(explore, net, KU115, cfg=_CFG)
+        gen = generic_only_design(net, KU115)
+        dpu = dpu_proxy_design(net, ZCU102)
+        rows.append({
+            "name": f"fig9_eff_{h}x{w}", "us_per_call": us,
+            "derived": (f"explorer={res.design.dsp_eff:.3f};"
+                        f"hybriddnn_proxy={gen.dsp_eff:.3f};"
+                        f"dpu_proxy={dpu.dsp_eff:.3f}")})
+    return rows
+
+
+def bench_fig10_throughput() -> list[dict]:
+    """Fig. 10 / Table 3: GOP/s on KU115 across the 12 input sizes."""
+    rows = []
+    for h, w in INPUT_CASES:
+        net = vgg16(h, w)
+        res, us = _timed(explore, net, KU115, cfg=_CFG)
+        d = res.design
+        pgops = paper.TABLE3[(h, w)][0]
+        rows.append({
+            "name": f"fig10_gops_{h}x{w}", "us_per_call": us,
+            "derived": (f"gops={d.gops:.1f}(paper={pgops});"
+                        f"sp={d.rav.sp};eff={d.dsp_eff:.3f};"
+                        f"search_s={res.search_time_s:.2f}")})
+    return rows
+
+
+def bench_fig11_deeper() -> list[dict]:
+    """Fig. 11: throughput vs depth (13/18/28/38-layer VGG-like, 224x224).
+    Reports our DSE result, our analytical DNNBuilder baseline, and the
+    ratio against the paper's *measured* DNNBuilder curve."""
+    rows = []
+    base = None
+    for extra, layers in [(0, 13), (1, 18), (3, 28), (5, 38)]:
+        net = vgg16(224, extra_per_group=extra)
+        res, us = _timed(explore, net, KU115, cfg=_CFG)
+        ours = res.design.gops
+        builder_model = dnnbuilder_design(net, KU115).gops
+        if base is None:
+            base = ours
+        builder_paper = base * paper.FIG11_DNNBUILDER_REL[layers]
+        rows.append({
+            "name": f"fig11_{layers}layers", "us_per_call": us,
+            "derived": (f"explorer={ours:.1f};builder_model={builder_model:.1f};"
+                        f"builder_paper={builder_paper:.1f};"
+                        f"ratio_vs_paper_builder={ours / builder_paper:.2f}x")})
+    return rows
+
+
+def bench_table3_rav() -> list[dict]:
+    """Table 3: full RAV + search-time reproduction at batch=1."""
+    rows = []
+    for h, w in INPUT_CASES:
+        net = vgg16(h, w)
+        res, us = _timed(explore, net, KU115, cfg=_CFG)
+        d = res.design
+        p_gops, p_ips, p_sp, p_dsp, p_eff, _ = paper.TABLE3[(h, w)]
+        rows.append({
+            "name": f"table3_{h}x{w}", "us_per_call": us,
+            "derived": (f"gops={d.gops:.1f}/{p_gops};"
+                        f"img_s={d.throughput_ips:.1f}/{p_ips};"
+                        f"sp={d.rav.sp}/{p_sp};dsp={d.dsp_used}/{p_dsp};"
+                        f"eff={d.dsp_eff:.3f}/{p_eff};"
+                        f"evals={res.pso.evaluations}")})
+    return rows
+
+
+def bench_table4_batch() -> list[dict]:
+    """Table 4: batch-size exploration for the small-input cases."""
+    rows = []
+    for (h, w), (p_batch, p_gops) in paper.TABLE4.items():
+        net = vgg16(h, w)
+        res, us = _timed(explore, net, KU115, batch_max=16,
+                         cfg=PSOConfig(population=24, iterations=40, seed=1))
+        d = res.design
+        rows.append({
+            "name": f"table4_{h}x{w}", "us_per_call": us,
+            "derived": (f"gops={d.gops:.1f}(paper={p_gops});"
+                        f"batch={d.rav.batch}(paper={p_batch})")})
+    return rows
+
+
+def bench_roofline() -> list[dict]:
+    """§Roofline: summarized per-cell terms from the dry-run artifacts
+    (full table in EXPERIMENTS.md; see benchmarks/roofline.py)."""
+    from .roofline import load_cells, roofline_rows
+    cells = load_cells("results/dryrun")
+    rows = []
+    for r in roofline_rows(cells):
+        rows.append({
+            "name": f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+            "us_per_call": 0.0,
+            "derived": (f"t_comp={r['t_compute']:.2e};t_mem={r['t_memory']:.2e};"
+                        f"t_coll={r['t_collective']:.2e};bound={r['bound']};"
+                        f"mfu_frac={r['roofline_frac']:.3f}")})
+    if not rows:
+        rows.append({"name": "roofline", "us_per_call": 0.0,
+                     "derived": "no dryrun artifacts (run repro.launch.dryrun)"})
+    return rows
+
+
+BENCHES = {
+    "fig1": bench_fig1_ctc,
+    "table1": bench_table1_variance,
+    "fig9": bench_fig9_dsp_efficiency,
+    "fig10": bench_fig10_throughput,
+    "fig11": bench_fig11_deeper,
+    "table3": bench_table3_rav,
+    "table4": bench_table4_batch,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=list(BENCHES), default=None)
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for n in names:
+        for row in BENCHES[n]():
+            print(f"{row['name']},{row['us_per_call']:.1f},\"{row['derived']}\"")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Serving example: continuous batching + int8 weight-only quantization.
+
+A ragged stream of requests (prompt lengths 3..24, varying max_new) served
+through the fixed-slot continuous batcher; compares slot utilization vs a
+naive static batch and shows the int8 storage win.
+
+    PYTHONPATH=src python examples/continuous_batching.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import api
+from repro.serve.quant import dequantize_params, quantize_params, storage_bytes
+from repro.serve.scheduler import ContinuousBatcher, Request
+
+
+def main():
+    cfg = get_config("starcoder2-3b").reduced()
+    params = api.init_params(jax.random.key(0), cfg)
+
+    q = quantize_params(params)
+    print(f"int8 weight-only quantization: {storage_bytes(params) / 2**20:.1f} "
+          f"MiB -> {storage_bytes(q) / 2**20:.1f} MiB "
+          f"({storage_bytes(params) / storage_bytes(q):.1f}x)")
+    params = dequantize_params(q)  # serve from the quantized store
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=list(rng.integers(0, cfg.vocab,
+                                                    int(rng.integers(3, 24)))),
+                    max_new=int(rng.integers(4, 12)))
+            for i in range(12)]
+
+    b = ContinuousBatcher(cfg, params, slots=4, max_seq=64)
+    for r in reqs:
+        b.submit(r)
+    t0 = time.perf_counter()
+    done = b.run()
+    dt = time.perf_counter() - t0
+
+    total_tokens = sum(len(c.tokens) + c.prompt_len for c in done)
+    print(f"served {len(done)} requests / {total_tokens} tokens in {dt:.2f}s "
+          f"({total_tokens / dt:.1f} tok/s), slot utilization "
+          f"{b.utilization:.0%} over {b.steps} ticks")
+    naive_ticks = sum(len(r.prompt) + r.max_new for r in reqs)  # 1 slot
+    static_ticks = 0  # static batching: batch of 4, each round as long as
+    for i in range(0, len(reqs), 4):  # its longest member
+        static_ticks += max(len(r.prompt) + r.max_new for r in reqs[i:i + 4])
+    print(f"vs sequential: {naive_ticks} ticks; vs static batch-of-4: "
+          f"{static_ticks} ticks; continuous: {b.steps} ticks")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""DNNExplorer-for-TPU: run the retargeted two-level DSE for every
+assigned architecture x workload and print the chosen plan — the TPU
+analogue of the paper's Table 3 (RAV per case).
+
+    PYTHONPATH=src python examples/plan_tpu.py [--shape train_4k]
+"""
+import argparse
+
+from repro.configs import ARCH_IDS, SHAPES, cell_enabled, get_config
+from repro.core.tpu_planner import best_plan
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shape", choices=list(SHAPES), default=None)
+    ap.add_argument("--max-chips", type=int, default=256)
+    args = ap.parse_args()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+
+    for shape_name in shapes:
+        shape = SHAPES[shape_name]
+        print(f"== {shape_name} (seq={shape.seq_len}, "
+              f"batch={shape.global_batch}) ==")
+        for arch in ARCH_IDS:
+            cfg = get_config(arch)
+            ok, why = cell_enabled(cfg, shape)
+            if not ok:
+                print(f"  {arch}: skipped ({why})")
+                continue
+            p = best_plan(cfg, shape, max_chips=args.max_chips)
+            print("  " + p.pretty())
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""End-to-end training driver: train a ~10M-param StarCoder2-family model
+for a few hundred steps on CPU with checkpointing, auto-resume, and a
+mid-run injected node failure — the full fault-tolerance path.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import dataclasses
+import logging
+import tempfile
+
+from repro.configs import get_config
+from repro.configs.base import ShapeSpec
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
+
+    # ~10M params: the reduced starcoder2 family scaled up a notch
+    cfg = dataclasses.replace(get_config("starcoder2-3b").reduced(),
+                              n_layers=4, d_model=256, d_ff=1024, vocab=2048)
+    shape = ShapeSpec("example", "train", args.seq, args.batch)
+    with tempfile.TemporaryDirectory() as ckpt:
+        trainer = Trainer(cfg, shape, TrainConfig(
+            steps=args.steps, ckpt_every=50, ckpt_dir=ckpt, log_every=25))
+        trainer.fail_at(args.steps // 2)  # exercise failover mid-run
+        trainer.run()
+        first = sum(s["loss"] for s in trainer.stats[:10]) / 10
+        last = sum(s["loss"] for s in trainer.stats[-10:]) / 10
+        print(f"\nloss: {first:.3f} -> {last:.3f} over {args.steps} steps "
+              f"({'improved' if last < first else 'NO IMPROVEMENT'})")
+        print(f"restarts: {trainer._restarts} (1 injected), "
+              f"stragglers flagged: {len(trainer.straggler_events)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""DNNExplorer's 3-step design flow (paper Fig. 4):
+
+1. *Model/HW Analysis* — :mod:`repro.core.netinfo` profiles the DNN.
+2. *Accelerator Modeling* — :mod:`repro.core.pipeline_model` +
+   :mod:`repro.core.generic_model` provide the analytical models.
+3. *Architecture Exploration* — global PSO over the RAV
+   (:mod:`repro.core.pso`) with local optimizers inside the fitness
+   (:mod:`repro.core.local_opt`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from .hw_specs import FPGASpec
+from .local_opt import RAV, DesignPoint, evaluate_rav
+from .netinfo import NetInfo
+from .pso import PSOConfig, PSOResult, optimize
+
+
+@dataclasses.dataclass
+class ExplorationResult:
+    net: str
+    fpga: str
+    design: DesignPoint
+    pso: PSOResult
+    search_time_s: float
+
+    @property
+    def rav_pretty(self) -> str:
+        r = self.design.rav
+        return (f"[SP={r.sp}, Batch={r.batch}, DSP={r.dsp_frac:.1%}, "
+                f"BRAM={r.bram_frac:.1%}, BW={r.bw_frac:.1%}]")
+
+
+def explore(net: NetInfo, fpga: FPGASpec, dw: int = 16, ww: int = 16,
+            batch_max: int = 1, cfg: PSOConfig | None = None) -> ExplorationResult:
+    """Run the full DNNExplorer flow for one (DNN, FPGA) pair."""
+    t0 = time.perf_counter()
+    sp_max = len(net.major_layers)
+
+    def fitness(rav: RAV) -> float:
+        return evaluate_rav(net, fpga, rav, dw, ww).fitness
+
+    pso = optimize(fitness, sp_max=sp_max, batch_max=batch_max, cfg=cfg)
+    design = evaluate_rav(net, fpga, pso.best_rav, dw, ww)
+    return ExplorationResult(net.name, fpga.name, design, pso,
+                             time.perf_counter() - t0)

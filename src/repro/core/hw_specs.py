@@ -1,0 +1,93 @@
+"""Hardware descriptions for the two targets DNNExplorer runs against.
+
+* ``FPGASpec`` — the paper's own domain (Xilinx parts; resource units match
+  the paper: DSP48 slices, 18-Kb BRAM blocks, external-memory GB/s).
+* ``TPUSpec`` — the retarget domain for the JAX runtime (per-chip peak
+  FLOP/s, HBM capacity/bandwidth, ICI link bandwidth), used by
+  ``core/tpu_planner.py`` and the roofline analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# ---------------------------------------------------------------------------
+# FPGA (faithful reproduction domain)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FPGASpec:
+    name: str
+    dsp: int            # DSP48 slices
+    bram18k: int        # 18-Kb BRAM blocks
+    bw_gbps: float      # external memory bandwidth, GB/s
+    freq_mhz: float = 200.0
+    # Place-and-route headroom: the paper's best designs use <=85% of DSPs
+    # (Table 3 peaks at 4686 of 5520) — routing congestion caps utilization.
+    usable_frac: float = 0.85
+
+    @property
+    def freq(self) -> float:
+        return self.freq_mhz * 1e6
+
+    @property
+    def dsp_usable(self) -> int:
+        return int(self.dsp * self.usable_frac)
+
+    @property
+    def bram_usable(self) -> int:
+        return int(self.bram18k * self.usable_frac)
+
+    @property
+    def bram_bits(self) -> int:
+        return self.bram18k * 18 * 1024
+
+    def peak_gops(self, alpha: int = 2) -> float:
+        """Peak throughput (GOP/s) per Eq. 1: alpha ops per DSP per cycle."""
+        return alpha * self.dsp_usable * self.freq / 1e9
+
+
+# Specs from Xilinx datasheets; BW = one effective DDR4-2400 channel per
+# accelerator (calibrated so the batch=1 small-input cases of Table 3 are
+# bandwidth-bound at the paper's measured throughput).
+KU115 = FPGASpec("ku115", dsp=5520, bram18k=4320, bw_gbps=19.2)
+ZC706 = FPGASpec("zc706", dsp=900, bram18k=1090, bw_gbps=12.8)    # DDR3-1600
+VU9P = FPGASpec("vu9p", dsp=6840, bram18k=4320, bw_gbps=38.4)     # 2 channels
+ZCU102 = FPGASpec("zcu102", dsp=2520, bram18k=1824, bw_gbps=19.2)
+
+FPGAS = {f.name: f for f in (KU115, ZC706, VU9P, ZCU102)}
+
+
+def alpha_for(bits: int) -> int:
+    """MAC-ops per DSP per cycle (Eq. 1): 2 for 16-bit, 4 for 8-bit inputs."""
+    if bits <= 8:
+        return 4
+    return 2
+
+
+# ---------------------------------------------------------------------------
+# TPU (retarget domain)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUSpec:
+    name: str
+    peak_flops: float       # per-chip, bf16
+    hbm_bytes: float        # per-chip capacity
+    hbm_bw: float           # per-chip, bytes/s
+    ici_bw: float           # per-link, bytes/s
+    vmem_bytes: float = 128 * 2 ** 20
+    # 2D torus: each chip has links on both mesh axes.
+    links_per_chip: int = 4
+
+
+TPU_V5E = TPUSpec(
+    name="tpu_v5e",
+    peak_flops=197e12,
+    hbm_bytes=16 * 2 ** 30,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+)
+
+TPUS = {TPU_V5E.name: TPU_V5E}

@@ -1,0 +1,106 @@
+"""Global optimization: particle-swarm search over the RAV (Algorithm 1).
+
+Each particle is a 5-dim position [SP, Batch, dsp_frac, bram_frac, bw_frac];
+fitness is the throughput returned by the local optimizers
+(:func:`repro.core.local_opt.evaluate_rav`). Early termination fires when the
+global best fails to improve for ``patience`` consecutive iterations (the
+paper uses 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from .local_opt import RAV
+
+
+@dataclasses.dataclass
+class PSOConfig:
+    population: int = 24
+    iterations: int = 40
+    inertia: float = 0.729       # w
+    c_local: float = 1.494       # c1
+    c_global: float = 1.494      # c2
+    patience: int = 2            # early-termination window (paper Sec. 7.2)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class PSOResult:
+    best_rav: RAV
+    best_fitness: float
+    iterations_run: int
+    evaluations: int
+    history: list[float]
+
+
+def _clip_round(pos: np.ndarray, lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+    return np.clip(pos, lo, hi)
+
+
+def _to_rav(pos: np.ndarray) -> RAV:
+    return RAV(sp=int(round(pos[0])), batch=max(1, int(round(pos[1]))),
+               dsp_frac=float(pos[2]), bram_frac=float(pos[3]),
+               bw_frac=float(pos[4]))
+
+
+def optimize(fitness_fn: Callable[[RAV], float], sp_max: int,
+             batch_max: int = 1, cfg: PSOConfig | None = None) -> PSOResult:
+    """Algorithm 1. ``fitness_fn`` must be deterministic (results are memoized
+    on the rounded RAV so repeated positions are free)."""
+    cfg = cfg or PSOConfig()
+    rng = np.random.default_rng(cfg.seed)
+    lo = np.array([0.0, 1.0, 0.05, 0.05, 0.05])
+    hi = np.array([float(sp_max), float(batch_max), 0.95, 0.95, 0.95])
+
+    pos = rng.uniform(lo, hi, size=(cfg.population, 5))
+    # Seed a few canonical particles: pure-generic, half-split, pure-pipeline.
+    pos[0] = [0.0, 1.0, 0.05, 0.05, 0.05]
+    pos[1] = [sp_max / 2, 1.0, 0.5, 0.5, 0.5]
+    pos[2] = [float(sp_max), 1.0, 0.95, 0.95, 0.95]
+    vel = rng.uniform(-1, 1, size=(cfg.population, 5)) * (hi - lo) * 0.1
+
+    cache: dict[tuple, float] = {}
+    evals = 0
+
+    def fit(p: np.ndarray) -> float:
+        nonlocal evals
+        rav = _to_rav(p)
+        key = rav.as_tuple()
+        # Round fractions to 2 decimals for cache hits without losing much.
+        key = (key[0], key[1], round(key[2], 2), round(key[3], 2), round(key[4], 2))
+        if key not in cache:
+            cache[key] = fitness_fn(rav)
+            evals += 1
+        return cache[key]
+
+    pbest = pos.copy()
+    pbest_fit = np.array([fit(p) for p in pos])
+    g_idx = int(np.argmax(pbest_fit))
+    gbest, gbest_fit = pbest[g_idx].copy(), float(pbest_fit[g_idx])
+
+    history = [gbest_fit]
+    stale = 0
+    it = 0
+    for it in range(1, cfg.iterations + 1):
+        r1 = rng.random((cfg.population, 5))
+        r2 = rng.random((cfg.population, 5))
+        vel = (cfg.inertia * vel
+               + cfg.c_local * r1 * (pbest - pos)
+               + cfg.c_global * r2 * (gbest[None, :] - pos))
+        pos = _clip_round(pos + vel, lo, hi)
+        improved = False
+        for i in range(cfg.population):
+            f = fit(pos[i])
+            if f > pbest_fit[i]:
+                pbest[i], pbest_fit[i] = pos[i].copy(), f
+            if f > gbest_fit:
+                gbest, gbest_fit = pos[i].copy(), f
+                improved = True
+        history.append(gbest_fit)
+        stale = 0 if improved else stale + 1
+        if stale >= cfg.patience:
+            break
+    return PSOResult(_to_rav(gbest), gbest_fit, it, evals, history)

@@ -1,0 +1,10 @@
+"""Oracle: lax.conv 'same' conv, NCHW."""
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(x, w):
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW")).astype(x.dtype)

@@ -1,0 +1,119 @@
+"""Flash attention Pallas TPU kernel (GQA, causal, sliding window).
+
+Design for TPU (not a CUDA port):
+* grid = (B*H, S/bq, S/bk); the kv axis is the LAST grid dim, so on TPU it
+  executes sequentially per (head, q-block) and the online-softmax state
+  lives in VMEM scratch across kv iterations.
+* Blocks are MXU-aligned: (bq, hd) x (hd, bk) contractions with hd padded
+  to a multiple of 128 by the wrapper.
+* GQA is handled in the BlockSpec index maps: the kv operand row for query
+  head h is ``b*KV + h // (H/KV)`` — no head replication in HBM.
+* Fully-masked kv blocks are skipped with pl.when (structural win for
+  causal: 2x fewer MACs).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int | None, s_k: int,
+            bq: int, bk: int, nk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    # Block-level skip: causal/window structure known from indices alone.
+    relevant = jnp.asarray(True)
+    if causal:
+        relevant = k_start <= q_start + bq - 1
+    if window is not None:
+        relevant = jnp.logical_and(relevant,
+                                   k_start + bk - 1 > q_start - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                 # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                 # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)                 # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        s = s * scale
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = k_pos < s_k                                 # padded keys masked
+        if causal:
+            ok = jnp.logical_and(ok, k_pos <= q_pos)
+        if window is not None:
+            ok = jnp.logical_and(ok, k_pos > q_pos - window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_scr[...]                              # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)                           # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                  # (bq, 1)
+        l_scr[...] = alpha * l_scr[...] + p.sum(-1, keepdims=True)
+        acc_scr[...] = alpha * acc_scr[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True,
+                         window: int | None = None, scale: float | None = None,
+                         s_k: int | None = None, bq: int = 256, bk: int = 256,
+                         interpret: bool = False):
+    """q (BH, S, hd); k, v (BKV, Sk, hd) with BH = B*H, BKV = B*KV.
+
+    Shapes must be pre-padded: S % bq == 0, Sk % bk == 0, hd % 128 == 0
+    (the ops wrapper does this); ``s_k`` is the true (unpadded) key length
+    so padded keys are masked out.
+    """
+    bh, s, hd = q.shape
+    bkv, s_kp, _ = k.shape
+    group = bh // bkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    nq, nk = s // bq, s_kp // bk
+    s_k = s_kp if s_k is None else s_k
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, s_k=s_k,
+        bq=bq, bk=bk, nk=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b // group, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

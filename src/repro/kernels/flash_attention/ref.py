@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None):
+    """q (B, S, H, hd); k, v (B, Sk, KV, hd) -> (B, S, H, hd). fp32 math."""
+    b, s, h, hd = q.shape
+    _, s_k, kv, _ = k.shape
+    g = h // kv
+    qg = q.astype(jnp.float32).reshape(b, s, kv, g, hd)
+    scores = jnp.einsum("bsngh,btnh->bngst", qg, k.astype(jnp.float32))
+    scores = scores / math.sqrt(hd)
+    qi = jnp.arange(s)[:, None] + (s_k - s)
+    kj = jnp.arange(s_k)[None, :]
+    ok = jnp.ones((s, s_k), bool)
+    if causal:
+        ok &= kj <= qi
+    if window is not None:
+        ok &= kj > qi - window
+    scores = jnp.where(ok[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngst,btnh->bsngh", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)

@@ -1,0 +1,56 @@
+"""Blocked MXU matmul Pallas kernel — the TPU analogue of the paper's
+generic-structure MAC array (Sec. 5.3.1): a reusable (bm x bn) compute tile
+fed by double-buffered VMEM operand tiles, fp32 accumulation in scratch.
+
+grid = (M/bm, N/bn, K/bk); the K axis is last (sequential on TPU) so the
+accumulator lives in VMEM scratch across K steps — exactly the paper's
+accumulation-buffer + ping-pong weight-buffer structure mapped onto the
+TPU memory hierarchy (HBM -> VMEM -> MXU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...].astype(jnp.float32), b_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())))
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_blocked(a, b, *, bm: int = 256, bn: int = 256, bk: int = 512,
+                   out_dtype=None, interpret: bool = False):
+    """a (M, K) @ b (K, N) -> (M, N). M/N/K must be multiples of bm/bn/bk
+    (the ops wrapper pads)."""
+    m, k = a.shape
+    _, n = b.shape
+    nk = k // bk
+    out_dtype = out_dtype or a.dtype
+    kernel = functools.partial(_kernel, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, ki: (i, ki)),
+            pl.BlockSpec((bk, bn), lambda i, j, ki: (ki, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, ki: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

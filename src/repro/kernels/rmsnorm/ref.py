@@ -1,0 +1,6 @@
+"""Oracle: the model's own rms_norm."""
+from repro.models.layers import rms_norm
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6):
+    return rms_norm(x, {"scale": scale}, eps)

@@ -1,0 +1,41 @@
+"""Fused RMSNorm Pallas kernel.
+
+Unfused, RMSNorm costs three HBM passes (read x for the mean-square,
+read x again to scale, write y); fused it is one read + one write with
+the reduction in VREGs — a pure memory-roofline win on the (B*S, D)
+activations that bracket every block. grid tiles rows; D stays whole in
+VMEM (d_model ≤ 18432 -> ≤ 72 KiB fp32/row, well inside VMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)               # (bm, D)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + eps)
+    o_ref[...] = (y * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm_rows(x, scale, *, eps: float = 1e-6, bm: int = 256,
+                 interpret: bool = False):
+    """x (N, D), scale (D,) -> (N, D). N must be a multiple of bm
+    (wrapper pads)."""
+    n, d = x.shape
+    kernel = functools.partial(_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=interpret,
+    )(x, scale)

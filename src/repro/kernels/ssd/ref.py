@@ -1,0 +1,7 @@
+"""Oracle for the SSD kernel: the model's own chunked-jnp implementation
+(itself validated against a per-step recurrence in the model tests)."""
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_ref(x, dt, a_log, b, c, chunk: int = 128):
+    return ssd_chunked(x, dt, a_log, b, c, chunk)

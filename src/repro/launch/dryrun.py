@@ -1,0 +1,144 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input-shape) cell this lowers + compiles the
+appropriate step function (train_step / prefill_step / serve_step) against
+the production mesh — 16x16 single-pod and 2x16x16 multi-pod — using
+ShapeDtypeStruct inputs (no allocation), then records
+``memory_analysis()`` / ``cost_analysis()`` / collective traffic for the
+roofline analysis.
+
+Usage:
+    python -m repro.launch.dryrun --arch starcoder2-3b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, cell_enabled, get_config
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.launch.hlo_cost import exact_cost
+from repro.launch.hlo_stats import (collective_stats, cost_summary,
+                                    memory_summary)
+from repro.train.steps import BASELINE, OPTIMIZED, build_step
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.models import api
+from repro.optim import adamw
+from repro.parallel import act
+from repro.parallel import sharding as shd
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             unroll: bool = False, optimized: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "multi_pod_2x16x16" if multi_pod else "single_pod_16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind, "seq_len": shape.seq_len,
+           "global_batch": shape.global_batch,
+           "params": cfg.param_count(),
+           "active_params": cfg.active_param_count()}
+    ok, why = cell_enabled(cfg, shape)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        return rec
+
+    t0 = time.perf_counter()
+    rec["unroll"] = unroll
+    rec["optimized"] = optimized
+    opts = OPTIMIZED if optimized else BASELINE
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    with mesh, act.activation_specs(act.default_specs(mesh)):
+        fn, args = build_step(cfg, shape, mesh, unroll=unroll, opts=opts)
+        lowered = fn.lower(*args)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    rec.update(status="ok", n_devices=mesh.devices.size,
+               lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+               cost=cost_summary(compiled), memory=memory_summary(compiled))
+    hlo = compiled.as_text()
+    st = collective_stats(hlo)
+    rec["collectives"] = {"bytes_by_kind": st.bytes_by_kind,
+                          "count_by_kind": st.count_by_kind,
+                          "total_bytes": st.total_bytes,
+                          "total_count": st.total_count}
+    # exact per-device dot/conv FLOPs + loop-aware collective traffic
+    # (XLA cost_analysis prices while bodies once; see hlo_cost.py)
+    rec["exact"] = exact_cost(hlo).as_dict()
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll layer scans for exact cost_analysis")
+    ap.add_argument("--opt", action="store_true",
+                    help="use the adopted §Perf optimizations (remat=dots, "
+                         "bf16 cast, grad constraints, MoE dispatch specs)")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.all else [args.arch]
+    shapes = list(SHAPES) if args.all else ([args.shape] if args.shape
+                                            else list(SHAPES))
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                if args.unroll:
+                    tag += "__unroll"
+                if args.opt:
+                    tag += "__opt"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[skip existing] {tag}")
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape, mp, unroll=args.unroll,
+                                   optimized=args.opt)
+                except Exception as e:  # record the failure, keep going
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()}
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if rec["status"] == "ok":
+                    m = rec["memory"]
+                    print(f"  ok: flops={rec['cost']['flops']:.3e} "
+                          f"bytes={rec['cost']['bytes_accessed']:.3e} "
+                          f"coll={rec['collectives']['total_bytes']:.3e} "
+                          f"mem/dev={m['total_per_device']/2**30:.2f}GiB "
+                          f"(compile {rec['compile_s']}s)", flush=True)
+                else:
+                    print(f"  {rec['status']}: {rec.get('reason') or rec.get('error')}",
+                          flush=True)
+    print(f"done, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

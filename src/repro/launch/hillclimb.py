@@ -1,0 +1,107 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: lower+compile one (arch x shape) cell under a
+named optimization variant and record the roofline terms, so EXPERIMENTS.md
+§Perf can show hypothesis -> change -> before/after.
+
+    python -m repro.launch.hillclimb --cell kimi-k2-1t-a32b:train_4k \
+        --variant v2_bf16_rs --out results/perf
+"""
+import argparse
+import json
+import time
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.launch.hlo_cost import exact_cost
+from repro.launch.hlo_stats import memory_summary
+from repro.launch.mesh import make_production_mesh
+from repro.parallel import act
+from repro.train.steps import BASELINE, StepOptions, build_step
+
+
+def _specs_baseline(mesh):
+    """The act-spec table the 80-cell baseline sweep ran with (before the
+    MoE dispatch constraints were added)."""
+    s = act.default_specs(mesh)
+    s.pop("experts_flat", None)
+    s.pop("tokens_flat", None)
+    return s
+
+
+def _specs_seqpar(mesh):
+    s = act.default_specs(mesh)
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    dpa = dp if len(dp) > 1 else dp[0]
+    # sequence-parallel residual stream: shard S over `model` between blocks
+    s["act"] = P(dpa, "model", None)
+    return s
+
+
+def _specs_ep_shardmap(mesh):
+    s = act.default_specs(mesh)
+    s["_ep_mesh"] = (mesh, "model")  # manual EP dispatch inside shard_map
+    return s
+
+
+VARIANTS: dict[str, tuple[StepOptions, callable]] = {
+    "v0_baseline": (BASELINE, _specs_baseline),
+    "v1_moe_dispatch": (BASELINE, act.default_specs),
+    "v2_bf16_cast": (StepOptions(cast_params=True), act.default_specs),
+    "v3_rs_grads": (StepOptions(cast_params=True, constrain_grads=True),
+                    act.default_specs),
+    "v4_remat_dots": (StepOptions(cast_params=True, constrain_grads=True,
+                                  remat="dots"), act.default_specs),
+    "v5_seqpar": (StepOptions(cast_params=True, constrain_grads=True),
+                  _specs_seqpar),
+    "v6_moe_ep_shardmap": (BASELINE, _specs_ep_shardmap),
+}
+
+
+def run_variant(arch: str, shape_name: str, variant: str,
+                multi_pod: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    opts, spec_fn = VARIANTS[variant]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.perf_counter()
+    with mesh, act.activation_specs(spec_fn(mesh)):
+        fn, args = build_step(cfg, shape, mesh, opts=opts)
+        compiled = fn.lower(*args).compile()
+    hlo = compiled.as_text()
+    ec = exact_cost(hlo)
+    return {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "opts": vars(opts) if not hasattr(opts, "__dataclass_fields__")
+        else {f: getattr(opts, f) for f in opts.__dataclass_fields__},
+        "exact": ec.as_dict(),
+        "memory": memory_summary(compiled),
+        "compile_s": round(time.perf_counter() - t0, 1),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--variant", choices=list(VARIANTS), required=True)
+    ap.add_argument("--out", default="results/perf")
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+    os.makedirs(args.out, exist_ok=True)
+    tag = f"{arch}__{shape}__{args.variant}"
+    print(f"[hillclimb] {tag}", flush=True)
+    rec = run_variant(arch, shape, args.variant)
+    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    e = rec["exact"]
+    print(f"  flops={e['flops']:.3e} coll={e['coll_total']:.3e} "
+          f"mem_hlo={e['mem_bytes']:.3e} "
+          f"temp/dev={rec['memory']['temp_size_in_bytes'] / 2**30:.1f}GiB "
+          f"({rec['compile_s']}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Input specifications for every (arch x shape) cell.
+
+``input_specs`` returns jax.ShapeDtypeStruct stand-ins (no allocation) for
+the dry-run; ``make_batch`` materializes small concrete batches for smoke
+tests and the CPU examples. Both share one shape source so the dry-run and
+the tests can never drift apart.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import api
+
+
+def _shapes_for(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """name -> (shape tuple, dtype) for the given workload."""
+    b, s = shape.global_batch, shape.seq_len
+    out: dict[str, tuple[tuple, np.dtype]] = {}
+    if shape.kind in ("train", "prefill"):
+        s_text = s
+        if cfg.family == "vlm":
+            s_text = s - cfg.n_patches
+            out["patch_embeds"] = ((b, cfg.n_patches, cfg.vision_embed_dim),
+                                   jnp.bfloat16)
+        if cfg.family == "audio":
+            out["frames"] = ((b, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16)
+        out["tokens"] = ((b, s_text), jnp.int32)
+        if shape.kind == "train":
+            out["labels"] = ((b, s_text), jnp.int32)
+    else:  # decode: one new token against a cache of length s
+        out["tokens"] = ((b, 1), jnp.int32)
+        out["pos"] = ((b,), jnp.int32)
+    return out
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct tree for jit(...).lower(**input_specs(...))."""
+    specs = {k: jax.ShapeDtypeStruct(sh, dt)
+             for k, (sh, dt) in _shapes_for(cfg, shape).items()}
+    if shape.kind == "decode":
+        cache = jax.eval_shape(
+            lambda: api.init_cache(cfg, shape.global_batch, shape.seq_len))
+        specs["cache"] = cache
+    return specs
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeSpec, seed: int = 0) -> dict:
+    """Concrete (small!) batch for CPU tests/examples."""
+    rng = np.random.default_rng(seed)
+    batch = {}
+    for k, (sh, dt) in _shapes_for(cfg, shape).items():
+        if dt == jnp.int32:
+            hi = cfg.vocab if k in ("tokens", "labels") else shape.seq_len
+            batch[k] = jnp.asarray(rng.integers(0, hi, size=sh), jnp.int32)
+        else:
+            batch[k] = jnp.asarray(rng.standard_normal(sh), dt)
+    if shape.kind == "decode":
+        batch["pos"] = jnp.full((shape.global_batch,), shape.seq_len - 1,
+                                jnp.int32)
+        batch["cache"] = api.init_cache(cfg, shape.global_batch, shape.seq_len)
+    return batch

@@ -1,0 +1,5 @@
+"""JAX model zoo: dense/MoE/SSM/hybrid/enc-dec LMs + the paper's CNNs."""
+from .api import decode_step, init_cache, init_params, loss_fn, prefill_logits
+
+__all__ = ["decode_step", "init_cache", "init_params", "loss_fn",
+           "prefill_logits"]

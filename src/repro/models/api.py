@@ -1,0 +1,86 @@
+"""Single entry point over the model zoo: init / loss / prefill / decode
+dispatched on ``ArchConfig.family``. Everything the launcher, trainer, and
+dry-run touch goes through these five functions.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import encdec, moe, recurrent, transformer
+
+
+def init_params(rng, cfg: ArchConfig, dtype=jnp.float32):
+    if cfg.family == "moe":
+        return moe.init_lm(rng, cfg, dtype)
+    if cfg.family == "ssm":
+        return recurrent.init_xlstm(rng, cfg, dtype)
+    if cfg.family == "hybrid":
+        return recurrent.init_zamba(rng, cfg, dtype)
+    if cfg.family == "audio":
+        return encdec.init_encdec(rng, cfg, dtype)
+    return transformer.init_lm(rng, cfg, dtype)  # dense | vlm
+
+
+def loss_fn(params, cfg: ArchConfig, batch: dict, **kw):
+    """batch: tokens/labels (+ patch_embeds for vlm, frames for audio)."""
+    if cfg.family == "moe":
+        return moe.loss_fn(params, cfg, batch["tokens"], batch["labels"], **kw)
+    if cfg.family == "ssm":
+        logits = recurrent.xlstm_forward(params, cfg, batch["tokens"], **kw)
+    elif cfg.family == "hybrid":
+        logits = recurrent.zamba_forward(params, cfg, batch["tokens"], **kw)
+    elif cfg.family == "audio":
+        return encdec.loss_fn(params, cfg, batch["tokens"], batch["labels"],
+                              batch["frames"], **kw)
+    elif cfg.family == "vlm":
+        return transformer.loss_fn(params, cfg, batch["tokens"], batch["labels"],
+                                   batch["patch_embeds"], **kw)
+    else:
+        return transformer.loss_fn(params, cfg, batch["tokens"], batch["labels"], **kw)
+    return transformer.softmax_xent(logits, batch["labels"])
+
+
+def prefill_logits(params, cfg: ArchConfig, batch: dict, **kw):
+    """Forward pass producing logits (the inference-prefill workload)."""
+    if cfg.family == "moe":
+        logits, _ = moe.forward(params, cfg, batch["tokens"], **kw)
+        return logits
+    if cfg.family == "ssm":
+        return recurrent.xlstm_forward(params, cfg, batch["tokens"], **kw)
+    if cfg.family == "hybrid":
+        return recurrent.zamba_forward(params, cfg, batch["tokens"], **kw)
+    if cfg.family == "audio":
+        return encdec.forward(params, cfg, batch["tokens"], batch["frames"], **kw)
+    if cfg.family == "vlm":
+        return transformer.forward(params, cfg, batch["tokens"],
+                                   batch["patch_embeds"], **kw)
+    return transformer.forward(params, cfg, batch["tokens"], **kw)
+
+
+def init_cache(cfg: ArchConfig, batch: int, s_max: int, dtype=jnp.bfloat16):
+    if cfg.family == "moe":
+        return moe.init_cache(cfg, batch, s_max, dtype)
+    if cfg.family == "ssm":
+        return recurrent.xlstm_init_cache(cfg, batch, s_max, dtype)
+    if cfg.family == "hybrid":
+        return recurrent.zamba_init_cache(cfg, batch, s_max, dtype)
+    if cfg.family == "audio":
+        return encdec.init_cache(cfg, batch, s_max, cfg.n_audio_frames, dtype)
+    return transformer.init_cache(cfg, batch, s_max, dtype)
+
+
+def decode_step(params, cfg: ArchConfig, cache, tokens, pos, **kw):
+    """(logits (B, vocab), new_cache) — one new token per sequence."""
+    if cfg.family == "moe":
+        return moe.decode_step(params, cfg, cache, tokens, pos, **kw)
+    if cfg.family == "ssm":
+        return recurrent.xlstm_decode_step(params, cfg, cache, tokens, pos, **kw)
+    if cfg.family == "hybrid":
+        return recurrent.zamba_decode_step(params, cfg, cache, tokens, pos, **kw)
+    if cfg.family == "audio":
+        return encdec.decode_step(params, cfg, cache, tokens, pos, **kw)
+    return transformer.decode_step(params, cfg, cache, tokens, pos, **kw)

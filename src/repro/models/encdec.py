@@ -1,0 +1,188 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+Per the assignment spec the conv frontend is a STUB: ``input_specs()``
+provides precomputed frame embeddings (B, n_frames, d_model); the encoder
+is the transformer stack on top of them. LayerNorm + GELU + learned-free
+sinusoidal positions follow the Whisper paper.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.parallel.act import constrain
+from .layers import (dense_init, embed_init, gqa_attention,
+                     gqa_decode_attention, init_attention, init_layernorm,
+                     init_mlp, layer_norm, mlp)
+from .transformer import _stack
+
+
+def sinusoids(length: int, channels: int) -> jax.Array:
+    """Whisper's sinusoidal position embedding."""
+    log_timescale = math.log(10000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2, dtype=jnp.float32))
+    ang = jnp.arange(length, dtype=jnp.float32)[:, None] * inv[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+
+
+def _init_enc_block(key, cfg: ArchConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_layernorm(cfg.d_model, dtype),
+        "attn": init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                               cfg.head_dim, dtype),
+        "ln2": init_layernorm(cfg.d_model, dtype),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, gated=False, dtype=dtype),
+    }
+
+
+def _init_dec_block(key, cfg: ArchConfig, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": init_layernorm(cfg.d_model, dtype),
+        "self_attn": init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                    cfg.head_dim, dtype),
+        "ln_x": init_layernorm(cfg.d_model, dtype),
+        "cross_attn": init_attention(k2, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                     cfg.head_dim, dtype),
+        "ln2": init_layernorm(cfg.d_model, dtype),
+        "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, gated=False, dtype=dtype),
+    }
+
+
+def init_encdec(key, cfg: ArchConfig, dtype=jnp.float32):
+    keys = jax.random.split(key, cfg.n_enc_layers + cfg.n_layers + 2)
+    return {
+        "embed": embed_init(keys[0], cfg.vocab, cfg.d_model, dtype),
+        "pos_dec": (jax.random.normal(keys[1], (cfg.max_seq, cfg.d_model),
+                                      jnp.float32) * 0.01).astype(dtype),
+        "enc_blocks": _stack([_init_enc_block(keys[2 + i], cfg, dtype)
+                              for i in range(cfg.n_enc_layers)]),
+        "dec_blocks": _stack([_init_dec_block(keys[2 + cfg.n_enc_layers + i],
+                                              cfg, dtype)
+                              for i in range(cfg.n_layers)]),
+        "ln_enc": init_layernorm(cfg.d_model, dtype),
+        "ln_f": init_layernorm(cfg.d_model, dtype),
+    }
+
+
+def encode(params, cfg: ArchConfig, frames, *, compute_dtype=jnp.bfloat16,
+           attn_fn=None, unroll: bool = False):
+    """frames (B, F, d_model): precomputed conv-frontend output (stub)."""
+    x = frames.astype(compute_dtype)
+    x = x + sinusoids(x.shape[1], cfg.d_model).astype(compute_dtype)[None]
+
+    def body(x, bp):
+        h = gqa_attention(layer_norm(x, bp["ln1"]), bp["attn"], cfg.n_heads,
+                          cfg.n_kv, rope=False, causal=False, attn_fn=attn_fn)
+        x = x + h
+        x = x + mlp(layer_norm(x, bp["ln2"]), bp["mlp"], "gelu")
+        return constrain(x, "act"), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"],
+                        unroll=cfg.n_enc_layers if unroll else 1)
+    return layer_norm(x, params["ln_enc"])
+
+
+def decode_train(params, cfg: ArchConfig, tokens, memory, *,
+                 compute_dtype=jnp.bfloat16, remat: str = "full", attn_fn=None,
+                 unroll: bool = False):
+    b, s = tokens.shape
+    x = params["embed"].astype(compute_dtype)[tokens]
+    x = x + params["pos_dec"][:s].astype(compute_dtype)[None]
+
+    def block(x, bp):
+        x = x + gqa_attention(layer_norm(x, bp["ln1"]), bp["self_attn"],
+                              cfg.n_heads, cfg.n_kv, rope=False, causal=True,
+                              attn_fn=attn_fn)
+        h = layer_norm(x, bp["ln_x"])
+        cd = h.dtype
+        hd = cfg.head_dim
+        mk = (memory @ bp["cross_attn"]["wk"].astype(cd)).reshape(
+            b, -1, cfg.n_kv, hd)
+        mv = (memory @ bp["cross_attn"]["wv"].astype(cd)).reshape(
+            b, -1, cfg.n_kv, hd)
+        x = x + gqa_attention(h, bp["cross_attn"], cfg.n_heads, cfg.n_kv,
+                              rope=False, causal=False, kv_override=(mk, mv))
+        x = x + mlp(layer_norm(x, bp["ln2"]), bp["mlp"], "gelu")
+        return constrain(x, "act")
+
+    body = jax.checkpoint(block) if remat == "full" else block
+    x, _ = jax.lax.scan(lambda h, bp: (body(h, bp), None), x,
+                        params["dec_blocks"],
+                        unroll=cfg.n_layers if unroll else 1)
+    x = layer_norm(x, params["ln_f"])
+    return constrain((x @ params["embed"].T.astype(compute_dtype))
+                     .astype(jnp.float32), "logits")
+
+
+def forward(params, cfg: ArchConfig, tokens, frames, **kw):
+    memory = encode(params, cfg, frames,
+                    compute_dtype=kw.get("compute_dtype", jnp.bfloat16),
+                    unroll=kw.get("unroll", False))
+    return decode_train(params, cfg, tokens, memory, **kw)
+
+
+def loss_fn(params, cfg: ArchConfig, tokens, labels, frames, **kw):
+    from .transformer import softmax_xent
+    logits = forward(params, cfg, tokens, frames, **kw)
+    return softmax_xent(logits, labels)
+
+
+def init_cache(cfg: ArchConfig, batch: int, s_max: int, n_frames: int,
+               dtype=jnp.bfloat16):
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, s_max, cfg.n_kv, cfg.head_dim), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, s_max, cfg.n_kv, cfg.head_dim), dtype),
+        # cross-attention K/V precomputed once from encoder memory
+        "xk": jnp.zeros((cfg.n_layers, batch, n_frames, cfg.n_kv, cfg.head_dim), dtype),
+        "xv": jnp.zeros((cfg.n_layers, batch, n_frames, cfg.n_kv, cfg.head_dim), dtype),
+    }
+
+
+def prefill_cross(params, cfg: ArchConfig, memory, cache):
+    """Fill the cross-attention K/V from encoder output (once per request)."""
+    b = memory.shape[0]
+    cd = memory.dtype
+    hd = cfg.head_dim
+
+    def per_layer(bp):
+        mk = (memory @ bp["cross_attn"]["wk"].astype(cd)).reshape(b, -1, cfg.n_kv, hd)
+        mv = (memory @ bp["cross_attn"]["wv"].astype(cd)).reshape(b, -1, cfg.n_kv, hd)
+        return mk, mv
+
+    xk, xv = jax.vmap(per_layer)(params["dec_blocks"])
+    return {**cache, "xk": xk.astype(cache["xk"].dtype),
+            "xv": xv.astype(cache["xv"].dtype)}
+
+
+def decode_step(params, cfg: ArchConfig, cache, tokens, pos, *,
+                compute_dtype=jnp.bfloat16, unroll: bool = False):
+    """One decoder token against self KV cache + precomputed cross K/V."""
+    b = tokens.shape[0]
+    x = params["embed"].astype(compute_dtype)[tokens]
+    x = x + jnp.take(params["pos_dec"].astype(compute_dtype), pos, axis=0)[:, None]
+
+    def block(x, layer):
+        bp, k_c, v_c, xk, xv = layer
+        out, k_c, v_c = gqa_decode_attention(
+            layer_norm(x, bp["ln1"]), bp["self_attn"], cfg.n_heads, cfg.n_kv,
+            k_c, v_c, pos, rope=False)
+        x = x + out
+        x = x + gqa_attention(layer_norm(x, bp["ln_x"]), bp["cross_attn"],
+                              cfg.n_heads, cfg.n_kv, rope=False, causal=False,
+                              kv_override=(xk, xv))
+        x = x + mlp(layer_norm(x, bp["ln2"]), bp["mlp"], "gelu")
+        return x, (k_c, v_c)
+
+    x, (k_n, v_n) = jax.lax.scan(
+        block, x, (params["dec_blocks"], cache["k"], cache["v"],
+                   cache["xk"], cache["xv"]),
+        unroll=cfg.n_layers if unroll else 1)
+    x = layer_norm(x, params["ln_f"])
+    logits = (x[:, 0] @ params["embed"].T.astype(compute_dtype)).astype(jnp.float32)
+    return logits, {**cache, "k": k_n, "v": v_n}

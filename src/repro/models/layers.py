@@ -1,0 +1,230 @@
+"""Shared neural-net building blocks (pure functions, explicit params).
+
+Conventions
+-----------
+* Params are nested dicts of jnp arrays; ``init_*`` builds them, the
+  matching ``apply`` function consumes them.
+* Weights are stored in ``param_dtype`` (fp32 for training) and cast to
+  ``compute_dtype`` (bf16) inside the ops — standard mixed precision.
+* All sequence ops are batch-first: activations are (B, S, D).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.act import constrain
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(x, params, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layer_norm(x, params, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, hd/2)
+    if ang.ndim == 2:  # (S, hd/2) -> broadcast over batch
+        ang = ang[None]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional sliding window)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv: int,
+                   head_dim: int | None = None, dtype=jnp.float32):
+    hd = head_dim or d_model // n_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, d_model, n_heads * hd, dtype),
+        "wk": dense_init(k2, d_model, n_kv * hd, dtype),
+        "wv": dense_init(k3, d_model, n_kv * hd, dtype),
+        "wo": dense_init(k4, n_heads * hd, d_model, dtype),
+    }
+
+
+def _causal_mask(s_q: int, s_k: int, window: int | None = None,
+                 offset: int = 0) -> jax.Array:
+    """(s_q, s_k) additive mask. ``offset`` = start position of the queries
+    within the key timeline (for decode: offset = s_k - s_q)."""
+    qi = jnp.arange(s_q)[:, None] + offset
+    kj = jnp.arange(s_k)[None, :]
+    ok = kj <= qi
+    if window is not None:
+        ok &= kj > qi - window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def gqa_attention(x, params, n_heads: int, n_kv: int, *, rope: bool = True,
+                  rope_theta: float = 10000.0, window: int | None = None,
+                  causal: bool = True, positions=None,
+                  kv_override: tuple[jax.Array, jax.Array] | None = None,
+                  attn_fn=None):
+    """Full-sequence GQA self attention (training / prefill path).
+
+    ``kv_override`` supplies external (k, v) for cross attention.
+    ``attn_fn`` optionally replaces the core softmax(QK^T)V computation
+    (e.g. with the Pallas flash-attention kernel).
+    """
+    b, s, d = x.shape
+    hd = params["wq"].shape[1] // n_heads
+    cd = x.dtype
+
+    q = constrain((x @ params["wq"].astype(cd)).reshape(b, s, n_heads, hd),
+                  "heads")
+    if kv_override is None:
+        k = (x @ params["wk"].astype(cd)).reshape(b, s, n_kv, hd)
+        v = (x @ params["wv"].astype(cd)).reshape(b, s, n_kv, hd)
+    else:
+        k, v = kv_override
+    s_k = k.shape[1]
+
+    if rope:
+        pos = positions if positions is not None else jnp.arange(s)
+        q = apply_rope(q, pos, rope_theta)
+        if kv_override is None:
+            k = apply_rope(k, pos, rope_theta)
+
+    if attn_fn is not None:
+        out = attn_fn(q, k, v, causal=causal, window=window)
+    else:
+        g = n_heads // n_kv
+        qg = q.reshape(b, s, n_kv, g, hd)
+        scores = jnp.einsum("bsngh,btnh->bngst", qg, k).astype(jnp.float32)
+        scores *= 1.0 / math.sqrt(hd)
+        if causal:
+            scores += _causal_mask(s, s_k, window, offset=s_k - s)[None, None, None]
+        probs = jax.nn.softmax(scores, axis=-1).astype(cd)
+        out = jnp.einsum("bngst,btnh->bsngh", probs, v).reshape(b, s, n_heads * hd)
+    out = constrain(out.reshape(b, s, -1), "attn_out")
+    return out @ params["wo"].astype(cd)
+
+
+def gqa_decode_attention(x, params, n_heads: int, n_kv: int, k_cache, v_cache,
+                         write_pos, *, rope_pos=None, valid_upto=None,
+                         rope: bool = True, rope_theta: float = 10000.0):
+    """One-token decode: x (B, 1, D); caches (B, S_slots, n_kv, hd).
+
+    ``write_pos`` (B,) — cache slot the new KV is written to (for a
+    sliding-window ring buffer this is ``pos % slots``).
+    ``rope_pos`` (B,) — absolute position for RoPE (defaults to write_pos).
+    ``valid_upto`` (B,) — highest valid slot index (defaults to write_pos;
+    a full ring buffer passes slots-1 so every slot participates).
+    Returns (out, new_k_cache, new_v_cache).
+    """
+    b, one, d = x.shape
+    hd = params["wq"].shape[1] // n_heads
+    cd = x.dtype
+    s_slots = k_cache.shape[1]
+    rope_pos = write_pos if rope_pos is None else rope_pos
+    valid_upto = write_pos if valid_upto is None else valid_upto
+
+    q = (x @ params["wq"].astype(cd)).reshape(b, 1, n_heads, hd)
+    k = (x @ params["wk"].astype(cd)).reshape(b, 1, n_kv, hd)
+    v = (x @ params["wv"].astype(cd)).reshape(b, 1, n_kv, hd)
+    if rope:
+        q = apply_rope(q, rope_pos[:, None], rope_theta)
+        k = apply_rope(k, rope_pos[:, None], rope_theta)
+
+    # Write new kv at write_pos (one-hot scatter keeps shapes static).
+    onehot = jax.nn.one_hot(write_pos, s_slots, dtype=cd)  # (B, S_slots)
+    k_cache = k_cache * (1 - onehot)[..., None, None] + onehot[..., None, None] * k
+    v_cache = v_cache * (1 - onehot)[..., None, None] + onehot[..., None, None] * v
+
+    g = n_heads // n_kv
+    qg = q.reshape(b, n_kv, g, hd)
+    scores = jnp.einsum("bngh,btnh->bngt", qg, k_cache).astype(jnp.float32)
+    scores *= 1.0 / math.sqrt(hd)
+    t = jnp.arange(s_slots)[None, None, None, :]
+    ok = t <= valid_upto[:, None, None, None]
+    scores = jnp.where(ok, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cd)
+    out = jnp.einsum("bngt,btnh->bngh", probs, v_cache).reshape(b, 1, n_heads * hd)
+    return out @ params["wo"].astype(cd), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d_model, d_ff, dtype),
+         "w_down": dense_init(ks[1], d_ff, d_model, dtype)}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def mlp(x, params, activation: str = "silu"):
+    cd = x.dtype
+    h = constrain(x @ params["w_up"].astype(cd), "ffn")
+    if activation == "relu2":        # Nemotron squared ReLU
+        h = jnp.square(jax.nn.relu(h))
+    elif activation == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        h = jax.nn.silu(h)
+    if "w_gate" in params:
+        h = h * (x @ params["w_gate"].astype(cd))
+    return h @ params["w_down"].astype(cd)

@@ -1,0 +1,220 @@
+"""Recurrent-family LMs: xLSTM (sLSTM + mLSTM blocks) and Zamba2
+(Mamba2 backbone + one *shared* attention block reused every N layers).
+
+Both families decode with O(1) state per token — the long_500k cell runs
+on these (and on SWA archs) while pure full-attention archs skip it.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMCfg
+from repro.parallel.act import constrain
+from .layers import (dense_init, embed_init, gqa_attention,
+                     gqa_decode_attention, init_attention, init_mlp,
+                     init_rmsnorm, mlp, rms_norm)
+from .ssm import (init_mamba2, init_mlstm, init_slstm, mamba2_apply,
+                  mamba2_decode, mlstm_apply, mlstm_decode, slstm_apply)
+from .transformer import _stack
+
+
+# ---------------------------------------------------------------------------
+# xLSTM
+# ---------------------------------------------------------------------------
+
+
+def _is_slstm(cfg: ArchConfig, i: int) -> bool:
+    ev = cfg.ssm.slstm_every
+    return bool(ev) and (i % ev == ev - 1)
+
+
+def init_xlstm(key, cfg: ArchConfig, dtype=jnp.float32):
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    blocks = []
+    for i in range(cfg.n_layers):
+        if _is_slstm(cfg, i):
+            blocks.append({"kind_slstm": init_slstm(keys[2 + i], cfg.d_model,
+                                                    cfg.n_heads, dtype),
+                           "ln": init_rmsnorm(cfg.d_model, dtype)})
+        else:
+            blocks.append({"kind_mlstm": init_mlstm(keys[2 + i], cfg.d_model,
+                                                    cfg.n_heads, dtype),
+                           "ln": init_rmsnorm(cfg.d_model, dtype)})
+    return {
+        "embed": embed_init(keys[0], cfg.vocab, cfg.d_model, dtype),
+        "lm_head": dense_init(keys[1], cfg.d_model, cfg.vocab, dtype),
+        "blocks": blocks,  # heterogeneous -> python list, not scanned
+        "ln_f": init_rmsnorm(cfg.d_model, dtype),
+    }
+
+
+def xlstm_forward(params, cfg: ArchConfig, tokens, *,
+                  compute_dtype=jnp.bfloat16, remat: str = "full",
+                  unroll: bool = False):  # layers are a python loop already
+    x = constrain(params["embed"].astype(compute_dtype)[tokens], "act")
+    chunk = cfg.ssm.chunk if cfg.ssm else 256
+
+    for bp in params["blocks"]:
+        if "kind_mlstm" in bp:
+            def body(x, bp=bp):
+                return x + mlstm_apply(rms_norm(x, bp["ln"]), bp["kind_mlstm"],
+                                       cfg.n_heads, chunk)
+        else:
+            def body(x, bp=bp):
+                y, _, _ = slstm_apply(rms_norm(x, bp["ln"]), bp["kind_slstm"])
+                return x + y
+        x = constrain(jax.checkpoint(body)(x) if remat == "full" else body(x),
+                      "act")
+
+    x = rms_norm(x, params["ln_f"])
+    return constrain((x @ params["lm_head"].astype(compute_dtype))
+                     .astype(jnp.float32), "logits")
+
+
+def xlstm_init_cache(cfg: ArchConfig, batch: int, s_max: int, dtype=jnp.bfloat16):
+    hd = cfg.d_model // cfg.n_heads
+    caches = []
+    for i in range(cfg.n_layers):
+        if _is_slstm(cfg, i):
+            caches.append({"h": jnp.zeros((batch, cfg.d_model), dtype),
+                           "c": jnp.zeros((batch, cfg.d_model), jnp.float32)})
+        else:
+            caches.append({"c": jnp.zeros((batch, cfg.n_heads, hd, hd), jnp.float32),
+                           "n": jnp.zeros((batch, cfg.n_heads, hd), jnp.float32),
+                           "m": jnp.full((batch, cfg.n_heads), -1e30, jnp.float32)})
+    return caches
+
+
+def xlstm_decode_step(params, cfg: ArchConfig, cache, tokens, pos, *,
+                      compute_dtype=jnp.bfloat16, unroll: bool = False):
+    x = params["embed"].astype(compute_dtype)[tokens]
+    new_cache = []
+    for bp, cc in zip(params["blocks"], cache):
+        if "kind_mlstm" in bp:
+            y, c, n, m = mlstm_decode(rms_norm(x, bp["ln"]), bp["kind_mlstm"],
+                                      cfg.n_heads, cc["c"], cc["n"], cc["m"])
+            x = x + y
+            new_cache.append({"c": c, "n": n, "m": m})
+        else:
+            y, h, c = slstm_apply(rms_norm(x, bp["ln"]), bp["kind_slstm"],
+                                  cc["h"], cc["c"])
+            x = x + y
+            new_cache.append({"h": h, "c": c})
+    x = rms_norm(x, params["ln_f"])
+    logits = (x[:, 0] @ params["lm_head"].astype(compute_dtype)).astype(jnp.float32)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 (hybrid)
+# ---------------------------------------------------------------------------
+
+
+def init_zamba(key, cfg: ArchConfig, dtype=jnp.float32):
+    """cfg.shared_attn_every Mamba2 layers per group; ONE shared attention
+    (+MLP) block reused after each group (the Zamba trick: attention
+    quality at ~1/9th the attention parameter cost)."""
+    n_groups = cfg.n_layers // cfg.shared_attn_every
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    mamba = [init_mamba2(keys[2 + i], cfg.d_model, cfg.ssm, dtype)
+             for i in range(cfg.n_layers)]
+    stacked = _stack(mamba)
+    # reshape leading dim (L,) -> (G, per)
+    per = cfg.shared_attn_every
+    stacked = jax.tree.map(
+        lambda a: a.reshape(n_groups, per, *a.shape[1:]), stacked)
+    k_attn, k_mlp = keys[-2], keys[-1]
+    return {
+        "embed": embed_init(keys[0], cfg.vocab, cfg.d_model, dtype),
+        "lm_head": dense_init(keys[1], cfg.d_model, cfg.vocab, dtype),
+        "mamba": stacked,
+        "shared": {
+            "ln1": init_rmsnorm(cfg.d_model, dtype),
+            "attn": init_attention(k_attn, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                   cfg.head_dim, dtype),
+            "ln2": init_rmsnorm(cfg.d_model, dtype),
+            "mlp": init_mlp(k_mlp, cfg.d_model, cfg.d_ff, cfg.gated_mlp, dtype),
+        },
+        "mamba_ln": init_rmsnorm(cfg.d_model, dtype),  # shared pre-norm scale
+        "ln_f": init_rmsnorm(cfg.d_model, dtype),
+    }
+
+
+def zamba_forward(params, cfg: ArchConfig, tokens, *,
+                  compute_dtype=jnp.bfloat16, remat: str = "full", attn_fn=None,
+                  unroll: bool = False):
+    x = constrain(params["embed"].astype(compute_dtype)[tokens], "act")
+    shared = params["shared"]
+
+    def inner(x, mp):
+        return x + mamba2_apply(rms_norm(x, params["mamba_ln"]), mp, cfg.ssm)
+
+    per = cfg.shared_attn_every
+
+    def group(x, gp):
+        x, _ = jax.lax.scan(lambda h, mp: (inner(h, mp), None), x, gp,
+                            unroll=per if unroll else 1)
+        # shared attention block (same params every group)
+        x = x + gqa_attention(rms_norm(x, shared["ln1"]), shared["attn"],
+                              cfg.n_heads, cfg.n_kv, rope=cfg.rope,
+                              rope_theta=cfg.rope_theta, attn_fn=attn_fn)
+        x = x + mlp(rms_norm(x, shared["ln2"]), shared["mlp"], cfg.activation)
+        return constrain(x, "act")
+
+    body = jax.checkpoint(group) if remat == "full" else group
+    n_groups = cfg.n_layers // cfg.shared_attn_every
+    x, _ = jax.lax.scan(lambda h, gp: (body(h, gp), None), x, params["mamba"],
+                        unroll=n_groups if unroll else 1)
+    x = rms_norm(x, params["ln_f"])
+    return constrain((x @ params["lm_head"].astype(compute_dtype))
+                     .astype(jnp.float32), "logits")
+
+
+def zamba_init_cache(cfg: ArchConfig, batch: int, s_max: int, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    d_in = s.expansion * cfg.d_model
+    n_h = d_in // s.head_dim
+    n_groups = cfg.n_layers // cfg.shared_attn_every
+    per = cfg.shared_attn_every
+    return {
+        "conv": jnp.zeros((n_groups, per, batch, s.conv_width - 1, d_in), dtype),
+        "ssm": jnp.zeros((n_groups, per, batch, n_h, s.head_dim, s.state_dim),
+                         jnp.float32),
+        # one KV cache per *group* (the shared block runs n_groups times)
+        "k": jnp.zeros((n_groups, batch, s_max, cfg.n_kv, cfg.head_dim), dtype),
+        "v": jnp.zeros((n_groups, batch, s_max, cfg.n_kv, cfg.head_dim), dtype),
+    }
+
+
+def zamba_decode_step(params, cfg: ArchConfig, cache, tokens, pos, *,
+                      compute_dtype=jnp.bfloat16, unroll: bool = False):
+    x = params["embed"].astype(compute_dtype)[tokens]
+    shared = params["shared"]
+
+    def group(x, gp):
+        mp, conv_c, ssm_c, k_c, v_c = gp
+
+        def inner(h, lp):
+            mpl, cc, sc = lp
+            y, cc, sc = mamba2_decode(rms_norm(h, params["mamba_ln"]), mpl,
+                                      cfg.ssm, cc, sc)
+            return h + y, (cc, sc)
+
+        x, (conv_c, ssm_c) = jax.lax.scan(inner, x, (mp, conv_c, ssm_c))
+        out, k_c, v_c = gqa_decode_attention(
+            rms_norm(x, shared["ln1"]), shared["attn"], cfg.n_heads, cfg.n_kv,
+            k_c, v_c, pos, rope=cfg.rope, rope_theta=cfg.rope_theta)
+        x = x + out
+        x = x + mlp(rms_norm(x, shared["ln2"]), shared["mlp"], cfg.activation)
+        return x, (conv_c, ssm_c, k_c, v_c)
+
+    x, (conv_n, ssm_n, k_n, v_n) = jax.lax.scan(
+        group, x, (params["mamba"], cache["conv"], cache["ssm"],
+                   cache["k"], cache["v"]),
+        unroll=(cfg.n_layers // cfg.shared_attn_every) if unroll else 1)
+    x = rms_norm(x, params["ln_f"])
+    logits = (x[:, 0] @ params["lm_head"].astype(compute_dtype)).astype(jnp.float32)
+    return logits, {"conv": conv_n, "ssm": ssm_n, "k": k_n, "v": v_n}

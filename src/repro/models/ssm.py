@@ -1,0 +1,336 @@
+"""State-space / recurrent blocks: Mamba2 (SSD) and xLSTM (mLSTM + sLSTM).
+
+The Mamba2 forward uses the chunked SSD algorithm (quadratic within a
+chunk, linear across chunks) — the same tiling the Pallas kernel in
+``repro.kernels.ssd`` implements; this module is its jnp reference user.
+Decode is O(1) per token via the recurrent state — this is why the
+``long_500k`` shape is runnable for SSM/hybrid archs but skipped for pure
+full-attention ones.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMCfg
+from repro.parallel.act import constrain
+from .layers import dense_init, embed_init, init_rmsnorm, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD (Mamba2 core): y = SSM(A, B, C)(x)
+# ---------------------------------------------------------------------------
+
+
+def _segsum(a):
+    """(..., Q) -> (..., Q, Q) lower-triangular segment sums:
+    out[i, j] = sum(a[j+1..i]) for j < i."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, b, c, chunk: int):
+    """Chunked selective-state-space scan (Mamba2 Listing 1, jnp).
+
+    x  (B, S, H, P)   input heads
+    dt (B, S, H)      softplus'd timestep
+    a_log (H,)        log of -A (per head)
+    b,c (B, S, N)     input/output projections (single group)
+    Returns y (B, S, H, P).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    nc = s // q
+    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+
+    a = -jnp.exp(a_log.astype(jnp.float32))            # (H,) negative
+    da = dt.astype(jnp.float32) * a[None, None, :]      # (B, S, H)
+
+    # reshape into chunks
+    xc = (x * dt[..., None]).reshape(bsz, nc, q, h, p)
+    dac = da.reshape(bsz, nc, q, h)
+    bc = b.reshape(bsz, nc, q, n)
+    cc = c.reshape(bsz, nc, q, n)
+
+    # -- intra-chunk (quadratic within chunk) --
+    l = jnp.exp(_segsum(dac.transpose(0, 1, 3, 2)))     # (B, NC, H, Q, Q)
+    cb = jnp.einsum("bzqn,bzkn->bzqk", cc, bc)          # (B, NC, Q, Q)
+    y_intra = jnp.einsum("bzqk,bzhqk,bzkhp->bzqhp", cb.astype(jnp.float32),
+                         l, xc.astype(jnp.float32))
+
+    # -- chunk states --
+    da_cum = jnp.cumsum(dac, axis=2)                    # (B, NC, Q, H)
+    da_total = da_cum[:, :, -1]                         # (B, NC, H)
+    decay_out = jnp.exp(da_total[:, :, None] - da_cum)  # (B, NC, Q, H)
+    states = jnp.einsum("bzqn,bzqh,bzqhp->bzhpn", bc.astype(jnp.float32),
+                        decay_out, xc.astype(jnp.float32))  # (B, NC, H, P, N)
+
+    # -- inter-chunk recurrence (linear scan over chunks) --
+    def scan_fn(prev, inp):
+        st, dtot = inp
+        new = st + jnp.exp(dtot)[..., None, None] * prev
+        return new, prev
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4), da_total.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B, NC, H, P, N)
+
+    decay_in = jnp.exp(da_cum)                          # (B, NC, Q, H)
+    y_inter = jnp.einsum("bzqn,bzqh,bzhpn->bzqhp", cc.astype(jnp.float32),
+                         decay_in, prev_states)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y.astype(x.dtype)
+
+
+def ssd_decode(state, x, dt, a_log, b, c):
+    """One-step recurrent update. state (B,H,P,N); x (B,H,P); dt (B,H);
+    b,c (B,N). Returns (y (B,H,P), new state)."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    da = dt.astype(jnp.float32) * a[None]                       # (B,H)
+    state = (jnp.exp(da)[..., None, None] * state
+             + jnp.einsum("bhp,bn,bh->bhpn", x.astype(jnp.float32),
+                          b.astype(jnp.float32), dt.astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bn->bhp", state, c.astype(jnp.float32))
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(key, d_model: int, s: SSMCfg, dtype=jnp.float32):
+    d_in = s.expansion * d_model
+    n_h = d_in // s.head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * d_in, dtype),     # z, x
+        "bc_proj": dense_init(ks[1], d_model, 2 * s.state_dim, dtype),
+        "dt_proj": dense_init(ks[2], d_model, n_h, dtype),
+        "dt_bias": jnp.zeros((n_h,), dtype),
+        "a_log": jnp.zeros((n_h,), dtype),                          # A = -1
+        "d_skip": jnp.ones((n_h,), dtype),
+        "conv_w": (jax.random.normal(ks[3], (s.conv_width, d_in), jnp.float32)
+                   * 0.1).astype(dtype),
+        "out_proj": dense_init(ks[4], d_in, d_model, dtype),
+        "norm": init_rmsnorm(d_in, dtype),
+    }
+
+
+def _causal_conv(x, w):
+    """x (B, S, D), w (W, D) depthwise causal conv."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1]] * w[i][None, None] for i in range(width))
+    return out
+
+
+def mamba2_apply(x, p, s: SSMCfg):
+    bsz, sl, d = x.shape
+    cd = x.dtype
+    d_in = p["conv_w"].shape[1]
+    n_h = p["a_log"].shape[0]
+
+    zx = constrain(x @ p["in_proj"].astype(cd), "ffn2")
+    z, xin = jnp.split(zx, 2, axis=-1)
+    xin = jax.nn.silu(_causal_conv(xin, p["conv_w"].astype(cd)))
+    bc = x @ p["bc_proj"].astype(cd)
+    b, c = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus((x @ p["dt_proj"].astype(cd)).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+
+    xh = xin.reshape(bsz, sl, n_h, s.head_dim)
+    y = ssd_chunked(xh, dt, p["a_log"], b, c, s.chunk)
+    y = y + xh * p["d_skip"].astype(cd)[None, None, :, None]
+    y = y.reshape(bsz, sl, d_in)
+    y = rms_norm(y, p["norm"]) * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(cd)
+
+
+def mamba2_decode(x, p, s: SSMCfg, conv_state, ssm_state):
+    """x (B, 1, D). conv_state (B, W-1, d_in); ssm_state (B, H, P, N)."""
+    bsz, _, d = x.shape
+    cd = x.dtype
+    n_h = p["a_log"].shape[0]
+
+    zx = x @ p["in_proj"].astype(cd)
+    z, xin = jnp.split(zx, 2, axis=-1)          # (B, 1, d_in)
+    # causal conv with rolling state
+    w = p["conv_w"].astype(cd)
+    seq = jnp.concatenate([conv_state, xin], axis=1)     # (B, W, d_in)
+    conv_out = jnp.einsum("bwd,wd->bd", seq, w)[:, None]
+    new_conv = seq[:, 1:]
+    xin = jax.nn.silu(conv_out)
+
+    bc = x @ p["bc_proj"].astype(cd)
+    b, c = jnp.split(bc[:, 0], 2, axis=-1)               # (B, N)
+    dt = jax.nn.softplus((x @ p["dt_proj"].astype(cd))[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B, H)
+
+    xh = xin[:, 0].reshape(bsz, n_h, s.head_dim)
+    y, new_ssm = ssd_decode(ssm_state, xh, dt, p["a_log"], b, c)
+    y = y + xh * p["d_skip"].astype(cd)[None, :, None]
+    y = y.reshape(bsz, 1, -1)
+    y = rms_norm(y, p["norm"]) * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(cd), new_conv, new_ssm
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory) + sLSTM (scalar memory)
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, d_model: int, n_heads: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    hd = d_model // n_heads
+    return {
+        "wq": dense_init(ks[0], d_model, d_model, dtype),
+        "wk": dense_init(ks[1], d_model, d_model, dtype),
+        "wv": dense_init(ks[2], d_model, d_model, dtype),
+        "wi": dense_init(ks[3], d_model, n_heads, dtype),
+        "wf": dense_init(ks[4], d_model, n_heads, dtype),
+        "wo": dense_init(ks[5], d_model, d_model, dtype),
+        "norm": init_rmsnorm(d_model, dtype),
+    }
+
+
+def mlstm_apply(x, p, n_heads: int, chunk: int = 256):
+    """Chunkwise-parallel mLSTM (linear attention with stabilized
+    exponential gating): quadratic within a chunk, O(1) state across
+    chunks — the same chunking xLSTM's TFLA kernels use. O(S) memory in
+    sequence length, so prefill_32k is feasible."""
+    bsz, s, d = x.shape
+    hd = d // n_heads
+    cd = x.dtype
+    q_len = min(chunk, s)
+    nc = s // q_len
+    assert s % q_len == 0, f"seq {s} not divisible by chunk {q_len}"
+
+    q = (x @ p["wq"].astype(cd)).reshape(bsz, s, n_heads, hd)
+    k = (x @ p["wk"].astype(cd)).reshape(bsz, s, n_heads, hd) / math.sqrt(hd)
+    v = (x @ p["wv"].astype(cd)).reshape(bsz, s, n_heads, hd)
+    i_g = (x @ p["wi"].astype(cd)).astype(jnp.float32)      # (B,S,H)
+    f_g = (x @ p["wf"].astype(cd)).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_g)
+
+    # chunked views: (B, NC, Q, ...)
+    qc = q.reshape(bsz, nc, q_len, n_heads, hd).astype(jnp.float32)
+    kc = k.reshape(bsz, nc, q_len, n_heads, hd).astype(jnp.float32)
+    vc = v.reshape(bsz, nc, q_len, n_heads, hd).astype(jnp.float32)
+    ic = i_g.reshape(bsz, nc, q_len, n_heads)
+    fc = logf.reshape(bsz, nc, q_len, n_heads)
+    cumf = jnp.cumsum(fc, axis=2)                           # (B,NC,Q,H)
+    g_total = cumf[:, :, -1]                                # (B,NC,H)
+
+    # intra-chunk decay matrix D[t,j] = cumf_t - cumf_j + i_j  (j <= t)
+    dmat = cumf[:, :, :, None, :] - cumf[:, :, None, :, :] + ic[:, :, None, :, :]
+    mask = jnp.tril(jnp.ones((q_len, q_len), bool))
+    dmat = jnp.where(mask[None, None, :, :, None], dmat, -jnp.inf)
+    m_local = jnp.max(dmat, axis=3)                         # (B,NC,Q,H)
+
+    # per-chunk state contribution (to be carried): sum_j exp(G - F_j + i_j) k v
+    s_decay = g_total[:, :, None, :] - cumf + ic            # (B,NC,Q,H)
+    m_state_local = jnp.max(s_decay, axis=2)                # (B,NC,H)
+
+    def scan_fn(carry, inp):
+        c_prev, n_prev, m_prev = carry                      # (B,H,hd,hd),(B,H,hd),(B,H)
+        kcz, vcz, qcz, dz, mz_local, sdz, ms_local, gz, cumfz = inp
+        # numerator/denominator stabilizers combine inter & intra
+        m_inter = cumfz + m_prev[:, None, :]                # (B,Q,H)
+        m_t = jnp.maximum(mz_local, m_inter)
+        # inter contribution
+        w_inter = jnp.exp(m_inter - m_t)                    # (B,Q,H)
+        num_i = jnp.einsum("bqnh,bnhp->bqnp", qcz, c_prev) * w_inter[..., None]
+        den_i = jnp.einsum("bqnh,bnh->bqn", qcz, n_prev) * w_inter
+        # intra contribution
+        wd = jnp.exp(dz - m_t[:, :, None, :])               # (B,Q,Q,H)
+        sc = jnp.einsum("bqnh,bjnh->bqjn", qcz, kcz) * wd
+        num = num_i + jnp.einsum("bqjn,bjnp->bqnp", sc, vcz)
+        den = den_i + sc.sum(2)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        y = num / den[..., None]                            # (B,Q,H,hd)
+        # state update
+        m_next = jnp.maximum(gz + m_prev, ms_local)         # (B,H)
+        w_keep = jnp.exp(gz + m_prev - m_next)
+        w_new = jnp.exp(sdz - m_next[:, None, :])           # (B,Q,H)
+        c_new = (w_keep[..., None, None] * c_prev
+                 + jnp.einsum("bqnh,bqnp,bqn->bnhp", kcz, vcz, w_new))
+        n_new = w_keep[..., None] * n_prev + jnp.einsum("bqnh,bqn->bnh", kcz, w_new)
+        return (c_new, n_new, m_next), y
+
+    init = (jnp.zeros((bsz, n_heads, hd, hd), jnp.float32),
+            jnp.zeros((bsz, n_heads, hd), jnp.float32),
+            jnp.full((bsz, n_heads), -1e30, jnp.float32))
+    swap = lambda t: t.transpose(1, 0, *range(2, t.ndim))
+    inputs = tuple(swap(t) for t in (kc, vc, qc, dmat, m_local, s_decay,
+                                     m_state_local, g_total, cumf))
+    _, ys = jax.lax.scan(scan_fn, init, inputs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, s, d).astype(cd)
+    y = rms_norm(y, p["norm"])
+    return y @ p["wo"].astype(cd)
+
+
+def mlstm_decode(x, p, n_heads: int, c_state, n_state, m_state):
+    """Recurrent mLSTM step. c (B,H,hd,hd), n (B,H,hd), m (B,H)."""
+    bsz, _, d = x.shape
+    hd = d // n_heads
+    cd = x.dtype
+    q = (x @ p["wq"].astype(cd)).reshape(bsz, n_heads, hd)
+    k = (x @ p["wk"].astype(cd)).reshape(bsz, n_heads, hd) / math.sqrt(hd)
+    v = (x @ p["wv"].astype(cd)).reshape(bsz, n_heads, hd)
+    i_g = (x @ p["wi"].astype(cd)).reshape(bsz, n_heads).astype(jnp.float32)
+    f_g = (x @ p["wf"].astype(cd)).reshape(bsz, n_heads).astype(jnp.float32)
+
+    logf = jax.nn.log_sigmoid(f_g)
+    m_new = jnp.maximum(logf + m_state, i_g)
+    fs = jnp.exp(logf + m_state - m_new)[..., None]
+    is_ = jnp.exp(i_g - m_new)[..., None]
+    c_new = fs[..., None] * c_state + is_[..., None] * jnp.einsum(
+        "bnh,bnp->bnhp", k.astype(jnp.float32), v.astype(jnp.float32))
+    n_new = fs * n_state + is_ * k.astype(jnp.float32)
+    num = jnp.einsum("bnh,bnhp->bnp", q.astype(jnp.float32), c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bnh,bnh->bn", q.astype(jnp.float32),
+                                         n_new)), jnp.exp(-m_new))[..., None]
+    y = (num / den).astype(cd).reshape(bsz, 1, d)
+    y = rms_norm(y, p["norm"])
+    return y @ p["wo"].astype(cd), c_new, n_new, m_new
+
+
+def init_slstm(key, d_model: int, n_heads: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 2)
+    return {
+        "w_gates": dense_init(ks[0], d_model, 4 * d_model, dtype),
+        "r_gates": dense_init(ks[1], d_model, 4 * d_model, dtype),
+        "norm": init_rmsnorm(d_model, dtype),
+    }
+
+
+def slstm_apply(x, p, h0=None, c0=None):
+    """Sequential sLSTM (scan over time). x (B, S, D)."""
+    bsz, s, d = x.shape
+    cd = x.dtype
+    gates_x = x @ p["w_gates"].astype(cd)  # precompute input part
+
+    def step(carry, gx):
+        h, c = carry
+        g = gx + h @ p["r_gates"].astype(cd)
+        i, f, z, o = jnp.split(g.astype(jnp.float32), 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jnp.exp(jnp.minimum(i, 0.0)) * jnp.tanh(z)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h.astype(cd), c), h.astype(cd)
+
+    h0 = jnp.zeros((bsz, d), cd) if h0 is None else h0
+    c0 = jnp.zeros((bsz, d), jnp.float32) if c0 is None else c0
+    (h, c), ys = jax.lax.scan(step, (h0, c0), gates_x.transpose(1, 0, 2))
+    y = rms_norm(ys.transpose(1, 0, 2), p["norm"])
+    return y, h, c

@@ -1,0 +1,154 @@
+"""Dense decoder-only LM (nemotron-4, starcoder2, h2o-danube, llava backbone).
+
+Layers are stacked along a leading axis and executed with ``jax.lax.scan``
+so the HLO stays compact for the 512-device dry-run compiles, with a
+configurable remat (activation-checkpoint) policy per block.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.parallel.act import constrain
+from .layers import (dense_init, embed_init, gqa_attention,
+                     gqa_decode_attention, init_attention, init_mlp,
+                     init_rmsnorm, mlp, rms_norm)
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_block(key, cfg: ArchConfig, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "attn": init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                               cfg.head_dim, dtype),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.gated_mlp, dtype),
+    }
+
+
+def init_lm(key, cfg: ArchConfig, dtype=jnp.float32):
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    params = {
+        "embed": embed_init(keys[0], cfg.vocab, cfg.d_model, dtype),
+        "blocks": _stack([init_block(keys[2 + i], cfg, dtype)
+                          for i in range(cfg.n_layers)]),
+        "ln_f": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.vocab, dtype)
+    if cfg.n_patches:
+        params["projector"] = dense_init(keys[-1], cfg.vision_embed_dim,
+                                         cfg.d_model, dtype)
+    return params
+
+
+def block_apply(x, bp, cfg: ArchConfig, attn_fn=None):
+    x = x + gqa_attention(rms_norm(x, bp["ln1"]), bp["attn"], cfg.n_heads,
+                          cfg.n_kv, rope=cfg.rope, rope_theta=cfg.rope_theta,
+                          window=cfg.window, attn_fn=attn_fn)
+    x = x + mlp(rms_norm(x, bp["ln2"]), bp["mlp"], cfg.activation)
+    return x
+
+
+def forward(params, cfg: ArchConfig, tokens, patch_embeds=None, *,
+            compute_dtype=jnp.bfloat16, remat: str = "full", attn_fn=None,
+            unroll: bool = False):
+    """tokens (B, S_text) int32 -> logits (B, S, vocab) in fp32.
+
+    VLM: ``patch_embeds`` (B, P, vision_embed_dim) are projected and
+    prepended to the token embeddings (anyres frontend is a stub per spec).
+    """
+    x = constrain(params["embed"].astype(compute_dtype)[tokens], "act")
+    if patch_embeds is not None:
+        proj = patch_embeds.astype(compute_dtype) @ params["projector"].astype(compute_dtype)
+        x = jnp.concatenate([proj, x], axis=1)
+
+    body = partial(block_apply, cfg=cfg, attn_fn=attn_fn)
+    if remat == "full":
+        body = jax.checkpoint(body)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    def step(x, bp):
+        return constrain(body(x, bp), "act"), None
+
+    x, _ = jax.lax.scan(step, x, params["blocks"],
+                        unroll=cfg.n_layers if unroll else 1)
+    x = rms_norm(x, params["ln_f"])
+    head = params["lm_head"] if "lm_head" in params else params["embed"].T
+    return constrain((x @ head.astype(compute_dtype)).astype(jnp.float32),
+                     "logits")
+
+
+def softmax_xent(logits, labels):
+    """Sharding-friendly cross entropy: contracts the (possibly
+    model-sharded) vocab axis with a one-hot einsum instead of
+    take_along_axis — a vocab-axis gather forces GSPMD to replicate the
+    full (B, S, V) logits per device (hundreds of GiB at scale)."""
+    lse = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    target = jnp.einsum("bsv,bsv->bs", logits, onehot).astype(jnp.float32)
+    return (lse - target).mean()
+
+
+def loss_fn(params, cfg: ArchConfig, tokens, labels, patch_embeds=None, **kw):
+    logits = forward(params, cfg, tokens, patch_embeds, **kw)
+    if patch_embeds is not None:
+        logits = logits[:, patch_embeds.shape[1]:]  # only text positions scored
+    return softmax_xent(logits, labels)
+
+
+# ---------------------------------------------------------------------------
+# Decode (one new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, s_max: int, dtype=jnp.bfloat16):
+    """KV cache (L, B, S_max, n_kv, hd). Sliding-window archs only need the
+    window slots (ring buffer) — this is what makes long_500k feasible for
+    SWA models."""
+    slots = min(s_max, cfg.window) if cfg.window else s_max
+    shape = (cfg.n_layers, batch, slots, cfg.n_kv, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_step(params, cfg: ArchConfig, cache, tokens, pos, *,
+                compute_dtype=jnp.bfloat16, unroll: bool = False):
+    """tokens (B, 1) int32; pos (B,) int32 -> (logits (B, vocab), new cache).
+
+    For windowed attention the cache slot is pos % window (ring buffer) and
+    RoPE still uses the absolute position.
+    """
+    x = constrain(params["embed"].astype(compute_dtype)[tokens], "dec")
+    slots = cache["k"].shape[2]
+    if cfg.window:
+        write_pos = pos % slots               # ring buffer
+        valid = jnp.minimum(pos, slots - 1)   # full ring => all slots live
+    else:
+        write_pos, valid = pos, pos
+
+    def step(x, layer):
+        bp, k_c, v_c = layer
+        h = rms_norm(x, bp["ln1"])
+        out, k_c, v_c = gqa_decode_attention(
+            h, bp["attn"], cfg.n_heads, cfg.n_kv, k_c, v_c, write_pos,
+            rope_pos=pos, valid_upto=valid, rope=cfg.rope,
+            rope_theta=cfg.rope_theta)
+        x = x + out
+        x = x + mlp(rms_norm(x, bp["ln2"]), bp["mlp"], cfg.activation)
+        return constrain(x, "dec"), (k_c, v_c)
+
+    x, (k_new, v_new) = jax.lax.scan(step, x, (params["blocks"], cache["k"], cache["v"]),
+                                     unroll=cfg.n_layers if unroll else 1)
+    x = rms_norm(x, params["ln_f"])
+    head = params["lm_head"] if "lm_head" in params else params["embed"].T
+    logits = (x[:, 0] @ head.astype(compute_dtype)).astype(jnp.float32)
+    return logits, {"k": k_new, "v": v_new}

@@ -1,0 +1,84 @@
+"""Activation sharding constraints.
+
+GSPMD's sharding propagation does not reliably push input shardings
+through scanned (while-loop) bodies — without explicit constraints the
+partitioner replicates activations per device (observed: full-batch
+f32[1048576, ...] dots and 221 GiB/device temps on the 256-chip mesh).
+Models therefore call :func:`constrain` at well-known points; the launcher
+installs a spec table for the active mesh via :func:`use_activation_specs`,
+and with no table installed the calls are no-ops (CPU tests, examples).
+
+The table is also the main §Perf lever: changing e.g. ``act`` from
+P(dp, None, None) to P(dp, "model", None) flips the model into sequence-
+parallel mode without touching model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def default_specs(mesh: Mesh) -> dict[str, P]:
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    dpa = dp if len(dp) > 1 else dp[0]
+    return {
+        # (B, S, D) residual-stream activations
+        "act": P(dpa, None, None),
+        # (B, S, F) ffn hidden — TP-sharded (Megatron column output)
+        "ffn": P(dpa, None, "model"),
+        # (B, S, 2*d_inner) mamba in_proj output
+        "ffn2": P(dpa, None, "model"),
+        # (B, S, H*hd) attention output before the row-parallel wo
+        "attn_out": P(dpa, None, "model"),
+        # (B, S, H, hd) attention heads — TP over heads
+        "heads": P(dpa, None, "model", None),
+        # (B, S, V) logits — TP over vocab
+        "logits": P(dpa, None, "model"),
+        # (E, C, D/F) MoE expert buffers — EP over experts
+        "experts": P("model", None, None),
+        # (E*C, D) flat expert buffers around the dispatch scatter/gather
+        "experts_flat": P("model", None),
+        # (k*T, D) flattened token stream entering/leaving dispatch
+        "tokens_flat": P(dpa, None),
+        # (B, 1, D) decode activations
+        "dec": P(dpa, None, None),
+    }
+
+
+def use_activation_specs(specs: dict | None):
+    """Install (or clear, with None) the activation spec table."""
+    _STATE.specs = specs
+
+
+@contextlib.contextmanager
+def activation_specs(specs: dict | None):
+    prev = getattr(_STATE, "specs", None)
+    _STATE.specs = specs
+    try:
+        yield
+    finally:
+        _STATE.specs = prev
+
+
+def ep_mesh():
+    """(mesh, axis) for shard_map expert parallelism, if the active spec
+    table advertises one (key ``_ep_mesh``); None otherwise."""
+    specs = getattr(_STATE, "specs", None)
+    if not specs:
+        return None
+    return specs.get("_ep_mesh")
+
+
+def constrain(x, name: str):
+    specs = getattr(_STATE, "specs", None)
+    if not specs or name not in specs or specs[name] is None:
+        return x
+    spec = specs[name]
+    if len(spec) > x.ndim:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

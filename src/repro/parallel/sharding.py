@@ -1,0 +1,182 @@
+"""Sharding rules: param + activation PartitionSpecs per arch family.
+
+Layout (GSPMD/pjit, MaxText-style):
+* ``model`` mesh axis — tensor parallel (Megatron column/row) + expert
+  parallel for MoE + sequence-parallel KV cache for decode.
+* ``data`` (and ``pod`` when present) — data parallel AND fully-sharded
+  params/optimizer (FSDP/ZeRO-3: weights sharded along their large
+  non-TP dim; XLA inserts the per-layer all-gathers).
+
+Rules are looked up by the *name* of each leaf (the last dict key on its
+path), with context checks for MoE expert tensors; leading stack dims
+(scan layers, zamba groups) are padded with ``None``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+FSDP = "__fsdp__"  # placeholder resolved to ("pod","data") or ("data",)
+
+
+def fsdp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return fsdp_axes(mesh)
+
+
+# name -> spec template (trailing dims; leading stack dims padded with None)
+_RULES: dict[str, tuple] = {
+    # embeddings / heads
+    "embed": (FSDP, "model"),
+    "lm_head": (FSDP, "model"),
+    "pos_dec": (None, "model"),
+    "projector": (None, "model"),
+    # attention
+    "wq": (FSDP, "model"), "wk": (FSDP, "model"), "wv": (FSDP, "model"),
+    "wo": ("model", FSDP),
+    # dense mlp
+    "w_up": (FSDP, "model"), "w_gate": (FSDP, "model"),
+    "w_down": ("model", FSDP),
+    # moe
+    "router": (FSDP, None),
+    # mamba2
+    "in_proj": (FSDP, "model"), "bc_proj": (FSDP, None),
+    "dt_proj": (FSDP, None), "out_proj": ("model", FSDP),
+    "conv_w": (None, "model"),
+    # xlstm gates
+    "wi": (FSDP, None), "wf": (FSDP, None),
+    "w_gates": (FSDP, "model"), "r_gates": (FSDP, "model"),
+}
+
+# MoE expert tensors (rank 3 before stacking): EP over `model`, FSDP inside.
+_MOE_RULES: dict[str, tuple] = {
+    "w_up": ("model", FSDP, None),
+    "w_gate": ("model", FSDP, None),
+    "w_down": ("model", FSDP, None),
+}
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            names.append(str(e.key))
+        elif isinstance(e, jax.tree_util.SequenceKey):
+            names.append(f"[{e.idx}]")
+        else:
+            names.append(str(e))
+    return names
+
+
+def _prod(xs) -> int:
+    out = 1
+    for x in xs:
+        out *= x
+    return out
+
+
+def fit_spec(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """pjit in_shardings demand exact divisibility (GSPMD does not pad
+    explicit argument shardings). Drop trailing mesh axes from any dim
+    that does not divide — e.g. whisper's vocab 51865 cannot take the
+    16-way 'model' axis, and batch-1 decode cannot take the DP axes."""
+    out = []
+    for d, entry in enumerate(spec):
+        if entry is None or d >= len(shape):
+            out.append(None if d >= len(shape) else entry)
+            continue
+        axes = tuple(entry) if isinstance(entry, tuple) else (entry,)
+        while axes and shape[d] % _prod(mesh.shape[a] for a in axes) != 0:
+            axes = axes[:-1]
+        out.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+    return P(*out)
+
+
+def _resolve(template: tuple, mesh: Mesh) -> tuple:
+    fs = fsdp_axes(mesh)
+    out = []
+    for t in template:
+        if t == FSDP:
+            out.append(fs if len(fs) > 1 else fs[0])
+        else:
+            out.append(t)
+    return tuple(out)
+
+
+def param_pspecs(params_or_shapes: Any, mesh: Mesh) -> Any:
+    """PartitionSpec tree matching the params pytree."""
+
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        rank = len(leaf.shape)
+        is_moe_expert = ("moe" in names and "shared" not in names
+                         and name in _MOE_RULES)
+        rule = _MOE_RULES[name] if is_moe_expert else _RULES.get(name)
+        if rule is None or rank < len(rule):
+            return P()  # scales, biases, scalars -> replicated
+        pad = (None,) * (rank - len(rule))
+        return fit_spec(P(*pad, *_resolve(rule, mesh)), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_or_shapes)
+
+
+def cache_pspecs(cfg: ArchConfig, cache_shapes: Any, mesh: Mesh) -> Any:
+    """KV/state cache specs. Dense KV caches are *sequence-sharded* along
+    `model` (distributed decode attention: partial scores + collective
+    softmax), batch along the DP axes. Recurrent states shard heads."""
+    dp = dp_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        rank = len(leaf.shape)
+        if cfg.family == "ssm":
+            # per-layer list caches: c (B,H,hd,hd) / n (B,H,hd) / m (B,H) /
+            # h (B,D) / c_slstm (B,D)
+            return P(*((dpa,) + (None,) * (rank - 1)))
+        if cfg.family == "hybrid":
+            if name in ("k", "v"):   # (G, B, S, kv, hd)
+                return P(None, dpa, "model", None, None)
+            if name == "conv":       # (G, per, B, W-1, d_in)
+                return P(None, None, dpa, None, "model")
+            if name == "ssm":        # (G, per, B, n_h, hd, N)
+                return P(None, None, dpa, "model", None, None)
+        if name in ("k", "v", "xk", "xv"):  # (L, B, S, kv, hd)
+            return P(None, dpa, "model", None, None)
+        return P()
+
+    def fitted(path, leaf):
+        return fit_spec(leaf_spec(path, leaf), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(fitted, cache_shapes)
+
+
+def batch_pspecs(cfg: ArchConfig, shape: ShapeSpec, specs: dict,
+                 mesh: Mesh) -> dict:
+    """Input shardings matching launch.specs.input_specs output."""
+    dp = dp_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    out = {}
+    for k, v in specs.items():
+        if k == "cache":
+            out[k] = cache_pspecs(cfg, v, mesh)
+        elif k == "pos":
+            out[k] = fit_spec(P(dpa), v.shape, mesh)
+        else:
+            out[k] = fit_spec(P(*((dpa,) + (None,) * (len(v.shape) - 1))),
+                              v.shape, mesh)
+    return out
+
+
+def named(tree, mesh: Mesh):
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec), tree,
+                        is_leaf=lambda x: isinstance(x, P))

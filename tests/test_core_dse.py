@@ -1,0 +1,218 @@
+"""Unit + property tests for the DNNExplorer core (analysis, models, DSE)."""
+import math
+
+import pytest
+
+from repro.core import (KU115, RAV, ZC706, PSOConfig, dnnbuilder_design,
+                        evaluate_rav, explore, generic_only_design, optimize)
+from repro.core.generic_model import GenericDesign
+from repro.core.local_opt import dpu_proxy_design
+from repro.core.netinfo import INPUT_CASES, TABLE1_NETS, vgg16
+from repro.core.pipeline_model import design_pipeline, split_pf
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# Model analysis (netinfo)
+# ---------------------------------------------------------------------------
+
+
+def test_vgg16_total_ops_matches_published():
+    # VGG-16 conv-only at 224x224 is ~30.7 GOP (paper Table 3 case 4:
+    # 1702.3 GOP/s / 55.4 img/s = 30.7 GOP/frame).
+    net = vgg16(224)
+    assert net.total_ops / 1e9 == pytest.approx(30.7, rel=0.02)
+
+
+def test_vgg16_layer_count():
+    assert len(vgg16(224).major_layers) == 13
+    assert len(vgg16(224, extra_per_group=5).major_layers) == 38
+
+
+def test_ctc_scales_with_input_area():
+    # Fig. 1: CTC medians grow ~256x from 32x32 to 512x512.
+    import statistics
+    m32 = statistics.median(vgg16(32).ctc_list())
+    m512 = statistics.median(vgg16(512).ctc_list())
+    assert m512 / m32 == pytest.approx(256, rel=0.01)
+
+
+def test_table1_first_half_variance_dominates():
+    # Table 1: V1/V2 >> 1 for all ten networks (paper min: 185.8).
+    for name, fn in TABLE1_NETS.items():
+        ratio = fn().half_variance_ratio()
+        assert ratio > 50, f"{name}: V1/V2={ratio}"
+
+
+# ---------------------------------------------------------------------------
+# Pipeline model
+# ---------------------------------------------------------------------------
+
+
+def test_split_pf_bounds():
+    for pf, c, k in [(1, 3, 64), (64, 3, 64), (512, 64, 128), (7, 5, 9)]:
+        cpf, kpf = split_pf(pf, c, k)
+        assert cpf <= c and kpf <= k
+        assert cpf * kpf <= pf
+        assert cpf >= 1 and kpf >= 1
+
+
+def test_pipeline_design_fits_resources():
+    net = vgg16(224)
+    d = design_pipeline(list(net.major_layers), dsp_cap=2000, bram_cap=1500,
+                        bw_bytes=10e9, freq=2e8, dw=16, ww=16)
+    assert d.dsp() <= 2000
+    assert d.bram() <= 1500
+
+
+def test_pipeline_throughput_compute_bound_matches_eq4():
+    net = vgg16(224)
+    d = design_pipeline(list(net.major_layers), dsp_cap=4000, bram_cap=4000,
+                        bw_bytes=1e12, freq=2e8, dw=16, ww=16)
+    # With infinite BW, throughput == 1 / max stage latency (Eq. 4, batch=1).
+    assert d.throughput_ips(2e8, 1e12) == pytest.approx(
+        1.0 / d.max_comp_latency(2e8))
+
+
+def test_pipeline_batch_amortizes_weight_bandwidth():
+    # Small input => weight-stream bound at batch 1; batch=8 must improve.
+    net = vgg16(32)
+    layers = list(net.major_layers)
+    d1 = design_pipeline(layers, 4000, 4000, 19.2e9, 2e8, 16, 16, batch=1)
+    d8 = design_pipeline(layers, 4000, 4000, 19.2e9, 2e8, 16, 16, batch=8)
+    assert d8.throughput_ips(2e8, 19.2e9) > 2 * d1.throughput_ips(2e8, 19.2e9)
+
+
+# ---------------------------------------------------------------------------
+# Generic model
+# ---------------------------------------------------------------------------
+
+
+def test_generic_tail_underutilization():
+    """ceil(C/CPF) lane waste: a 3-channel layer on a 64-lane array must be
+    ~21x slower than ideal — the paradigm-A weakness (Fig. 2a)."""
+    from repro.core.netinfo import LayerInfo
+    l3 = LayerInfo("l", "conv", 224, 224, 3, 64, 3, 3)
+    l64 = LayerInfo("l", "conv", 224, 224, 64, 64, 3, 3)
+    g = GenericDesign(64, 64, 16, 16, bram=2000, bw_bytes=1e12)
+    t3 = g.layer_latency(l3, 2e8)
+    t64 = g.layer_latency(l64, 2e8)
+    # l64 has ~21.3x the MACs of l3 but must take the SAME time (one lane
+    # pass each): equal cycle counts.
+    assert t3 == pytest.approx(t64, rel=0.01)
+
+
+def test_generic_strategy2_ws_helps_weight_heavy_layers():
+    from repro.core.netinfo import LayerInfo
+    # 1x1 fm with giant weights: WS (weights resident) must beat IS.
+    l = LayerInfo("fc", "fc", 1, 1, 25088, 4096)
+    g2 = GenericDesign(64, 64, 16, 16, bram=3000, bw_bytes=19.2e9, strategy=2)
+    lat = g2.layer_latency(l, 2e8)
+    w_bytes = l.weight_bytes(16)
+    # WS loads weights exactly once: latency <= max(compute, w/BW) + eps.
+    assert lat <= max(w_bytes / 19.2e9, g2._l_comp(l, 2e8)) * 1.01
+
+
+def test_gfm_grouping_monotone_in_batch():
+    from repro.core.netinfo import LayerInfo
+    l = LayerInfo("c", "conv", 112, 112, 64, 128, 3, 3)
+    g = GenericDesign(32, 32, 16, 16, bram=1000, bw_bytes=19.2e9)
+    assert g.g_fm(l, 8) >= g.g_fm(l, 1)
+
+
+# ---------------------------------------------------------------------------
+# DSE
+# ---------------------------------------------------------------------------
+
+
+def test_evaluate_rav_deterministic():
+    net = vgg16(128)
+    rav = RAV(6, 2, 0.5, 0.5, 0.5)
+    a = evaluate_rav(net, KU115, rav)
+    b = evaluate_rav(net, KU115, rav)
+    assert a.throughput_ips == b.throughput_ips
+    assert a.dsp_used == b.dsp_used
+
+
+def test_evaluate_rav_respects_resources():
+    net = vgg16(224)
+    for sp in (0, 4, 13):
+        d = evaluate_rav(net, KU115, RAV(sp, 1, 0.6, 0.6, 0.6))
+        if d.feasible:
+            assert d.dsp_used <= KU115.dsp_usable
+            assert d.bram_used <= KU115.bram_usable
+
+
+def test_explorer_beats_or_matches_both_baselines():
+    net = vgg16(224)
+    res = explore(net, KU115, cfg=PSOConfig(population=16, iterations=20, seed=3))
+    b = dnnbuilder_design(net, KU115)
+    g = generic_only_design(net, KU115)
+    assert res.design.gops >= 0.99 * max(b.gops, g.gops)
+
+
+def test_explorer_reproduces_paper_case4_throughput():
+    # Paper Table 3 case 4: 1702.3 GOP/s, 95.8% DSP efficiency at 224x224.
+    net = vgg16(224)
+    res = explore(net, KU115, cfg=PSOConfig(population=20, iterations=30, seed=1))
+    assert res.design.gops == pytest.approx(1702.3, rel=0.05)
+    assert res.design.dsp_eff > 0.90
+
+
+def test_explorer_batch_recovers_small_input_throughput():
+    # Paper Table 4 case 1: batching raises 32x32 from 368 to 1698 GOP/s.
+    net = vgg16(32)
+    r1 = explore(net, KU115, batch_max=1,
+                 cfg=PSOConfig(population=20, iterations=30, seed=1))
+    r8 = explore(net, KU115, batch_max=16,
+                 cfg=PSOConfig(population=24, iterations=40, seed=1))
+    assert r8.design.gops > 3 * r1.design.gops
+    assert r8.design.gops == pytest.approx(1698.1, rel=0.10)
+
+
+def test_pso_early_termination_and_improvement():
+    calls = []
+
+    def fitness(rav):
+        calls.append(rav)
+        return -abs(rav.sp - 5) - abs(rav.dsp_frac - 0.5)
+
+    res = optimize(fitness, sp_max=13, batch_max=4,
+                   cfg=PSOConfig(population=12, iterations=50, seed=0))
+    assert res.best_rav.sp == 5
+    assert res.iterations_run <= 50
+
+
+def test_dpu_proxy_small_input_inefficiency():
+    # Fig. 2a: fixed-geometry IP efficiency degrades with small inputs.
+    from repro.core import ZCU102
+    e32 = dpu_proxy_design(vgg16(32), ZCU102).dsp_eff
+    e224 = dpu_proxy_design(vgg16(224), ZCU102).dsp_eff
+    assert e224 > 2 * e32
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.integers(1, 4096), st.integers(1, 2048), st.integers(1, 2048))
+    @settings(max_examples=200, deadline=None)
+    def test_split_pf_property(pf, c, k):
+        cpf, kpf = split_pf(pf, c, k)
+        assert 1 <= cpf <= max(1, c)
+        assert 1 <= kpf <= max(1, k)
+        assert cpf * kpf <= max(1, pf)
+
+    @given(st.integers(0, 13), st.integers(1, 8),
+           st.floats(0.05, 0.95), st.floats(0.05, 0.95), st.floats(0.05, 0.95))
+    @settings(max_examples=30, deadline=None)
+    def test_evaluate_rav_never_exceeds_chip(sp, batch, fd, fb, fw):
+        net = vgg16(64)
+        d = evaluate_rav(net, ZC706, RAV(sp, batch, fd, fb, fw))
+        assert d.throughput_ips >= 0
+        if d.feasible:
+            assert d.dsp_used <= ZC706.dsp_usable
