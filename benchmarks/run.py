@@ -3,12 +3,15 @@
 Each benchmark returns rows ``{name, us_per_call, derived}`` where
 ``derived`` holds the headline metric(s) the paper's table/figure reports;
 ``main`` prints one CSV line per row:  name,us_per_call,derived.
+``--json out.json`` additionally dumps the rows as structured JSON so
+campaign/bench results can feed the ``BENCH_*.json`` perf trajectory.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig11]
+    PYTHONPATH=src python -m benchmarks.run [--only fig11] [--json out.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import statistics
 import time
 
@@ -162,6 +165,30 @@ def bench_roofline() -> list[dict]:
     return rows
 
 
+def bench_dse_campaign() -> list[dict]:
+    """repro.dse: a small (net x fpga x precision) campaign — wall time,
+    memoized re-run time, and frontier size."""
+    import tempfile
+
+    from repro.dse import run_campaign
+    from repro.dse.campaign import expand_cells
+
+    cells = expand_cells(["vgg16"], [(64, 64), (224, 224)],
+                         ["ku115", "zcu102"], [16, 8], [1])
+    with tempfile.TemporaryDirectory() as td:
+        store = f"{td}/bench.jsonl"
+        rep, us = _timed(run_campaign, cells, store, population=20,
+                         iterations=30)
+        rerun, us2 = _timed(run_campaign, cells, store, population=20,
+                            iterations=30)
+    return [{
+        "name": f"dse_campaign_{len(cells)}cells", "us_per_call": us,
+        "derived": (f"evals={rep.new_evaluations};"
+                    f"frontier={len(rep.frontier())};"
+                    f"resume_us={us2:.0f};"
+                    f"resume_evals={rerun.new_evaluations}")}]
+
+
 BENCHES = {
     "fig1": bench_fig1_ctc,
     "table1": bench_table1_variance,
@@ -170,6 +197,7 @@ BENCHES = {
     "fig11": bench_fig11_deeper,
     "table3": bench_table3_rav,
     "table4": bench_table4_batch,
+    "campaign": bench_dse_campaign,
     "roofline": bench_roofline,
 }
 
@@ -177,12 +205,19 @@ BENCHES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=list(BENCHES), default=None)
+    ap.add_argument("--json", dest="json_path", default=None, metavar="OUT",
+                    help="also write rows (grouped by benchmark) as JSON")
     args = ap.parse_args()
     names = [args.only] if args.only else list(BENCHES)
+    results: dict[str, list[dict]] = {}
     print("name,us_per_call,derived")
     for n in names:
-        for row in BENCHES[n]():
+        results[n] = BENCHES[n]()
+        for row in results[n]:
             print(f"{row['name']},{row['us_per_call']:.1f},\"{row['derived']}\"")
+    if args.json_path:
+        with open(args.json_path, "w") as f:
+            json.dump({"benchmarks": results}, f, indent=2, sort_keys=True)
 
 
 if __name__ == "__main__":

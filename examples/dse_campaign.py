@@ -1,0 +1,45 @@
+"""Quickstart: a multi-objective DSE campaign with repro.dse.
+
+Sweeps VGG-16 at two input sizes across two FPGAs and two precisions
+(8 cells), persists every cell to a JSONL store, then shows the three
+things the campaign engine adds over the single-pair ``explore()``:
+
+1. ranked results under a custom scalarization (throughput + efficiency),
+2. the 5-objective Pareto frontier across all designs, and
+3. free re-runs — the second campaign reuses the store, zero PSO evals.
+
+    PYTHONPATH=src python examples/dse_campaign.py
+"""
+from repro.dse import Objectives, run_campaign
+from repro.dse.campaign import expand_cells
+
+
+def main():
+    cells = expand_cells(nets=["vgg16"], inputs=[(64, 64), (224, 224)],
+                         fpgas=["ku115", "zcu102"], precisions=[16, 8],
+                         batch_caps=[4])
+    store = "results/dse_quickstart.jsonl"
+    print(f"== campaign: {len(cells)} cells -> {store} ==")
+    report = run_campaign(cells, store, workers=2, progress=print)
+
+    weights = {"throughput_ips": 1.0, "dsp_eff": 100.0}
+    print(f"\n== ranked by {weights} ==")
+    for rec in report.ranked(weights)[:4]:
+        o = rec["objectives"]
+        print(f"  {rec['cell_key']}: {o['throughput_ips']:.1f} img/s, "
+              f"{o['gops']:.1f} GOP/s, eff {o['dsp_eff']:.1%}")
+
+    print("\n== Pareto frontier (throughput, GOP/s, latency, eff, BRAM) ==")
+    for rec in report.frontier():
+        o = Objectives.from_dict(rec["objectives"])
+        print(f"  {rec['cell_key']}: {o.throughput_ips:.1f} img/s, "
+              f"{o.latency_s * 1e3:.2f} ms, {int(o.bram_used)} BRAM")
+
+    rerun = run_campaign(cells, store)
+    print(f"\n== resume: {rerun.reused_cells}/{len(cells)} cells reused, "
+          f"{rerun.new_evaluations} new evaluations ==")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

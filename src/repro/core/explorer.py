@@ -6,11 +6,18 @@
 3. *Architecture Exploration* — global PSO over the RAV
    (:mod:`repro.core.pso`) with local optimizers inside the fitness
    (:mod:`repro.core.local_opt`).
+
+This module runs the flow for ONE (DNN, FPGA) pair and one scalar
+objective — the paper's Table 3 setting. Campaign-scale sweeps over many
+(network x input x FPGA x precision x batch) cells with multi-objective
+Pareto frontiers live in :mod:`repro.dse`, which builds on this entry
+point.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from typing import Callable
 
 from .hw_specs import FPGASpec
 from .local_opt import RAV, DesignPoint, evaluate_rav
@@ -34,15 +41,25 @@ class ExplorationResult:
 
 
 def explore(net: NetInfo, fpga: FPGASpec, dw: int = 16, ww: int = 16,
-            batch_max: int = 1, cfg: PSOConfig | None = None) -> ExplorationResult:
-    """Run the full DNNExplorer flow for one (DNN, FPGA) pair."""
+            batch_max: int = 1, cfg: PSOConfig | None = None,
+            objective: Callable[[DesignPoint], float] | None = None,
+            ) -> ExplorationResult:
+    """Run the full DNNExplorer flow for one (DNN, FPGA) pair.
+
+    ``objective`` scalarizes a :class:`DesignPoint` into the fitness the PSO
+    maximizes; the default is feasible throughput (``DesignPoint.fitness``),
+    which keeps the paper's single-objective behavior. :mod:`repro.dse`
+    passes weighted multi-objective scalarizations here.
+    """
     t0 = time.perf_counter()
     sp_max = len(net.major_layers)
+    obj = objective if objective is not None else (lambda d: d.fitness)
 
-    def fitness(rav: RAV) -> float:
-        return evaluate_rav(net, fpga, rav, dw, ww).fitness
+    def batch_fitness(ravs: list[RAV]) -> list[float]:
+        return [obj(evaluate_rav(net, fpga, r, dw, ww)) for r in ravs]
 
-    pso = optimize(fitness, sp_max=sp_max, batch_max=batch_max, cfg=cfg)
+    pso = optimize(sp_max=sp_max, batch_max=batch_max, cfg=cfg,
+                   batch_fitness_fn=batch_fitness)
     design = evaluate_rav(net, fpga, pso.best_rav, dw, ww)
     return ExplorationResult(net.name, fpga.name, design, pso,
                              time.perf_counter() - t0)

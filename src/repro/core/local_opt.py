@@ -48,6 +48,7 @@ class DesignPoint:
     dsp_used: int
     bram_used: int
     dsp_eff: float
+    latency_s: float = 0.0   # end-to-end batch latency (pipeline + generic)
     feasible: bool = True
 
     @property
@@ -126,17 +127,23 @@ def evaluate_rav(net: NetInfo, fpga: FPGASpec, rav: RAV, dw: int = 16,
 
     # ---- Combine ----------------------------------------------------------
     if not pipe.stages and gen is None:
-        return DesignPoint(rav, pipe, gen, 0.0, 0.0, 0, 0, 0.0, feasible=False)
+        return DesignPoint(rav, pipe, gen, 0.0, 0.0, 0, 0, 0.0, 0.0,
+                           feasible=False)
 
     rate_p = pipe.throughput_ips(freq, bw_p) if pipe.stages else float("inf")
+    lat_p = pipe.batch_latency(freq, bw_p) if pipe.stages else 0.0
     if gen is not None:
         lat_g = gen.segment_latency(gen_layers, freq, rav.batch)
         rate_g = rav.batch / lat_g if lat_g > 0 else float("inf")
     else:
+        lat_g = 0.0
         rate_g = float("inf")
     rate = min(rate_p, rate_g)
     if not math.isfinite(rate):
         rate = 0.0
+    # One batch crosses both halves back-to-back (steady-state throughput
+    # overlaps them, first-batch latency does not).
+    latency_s = lat_p + lat_g
 
     dsp_used = pipe.dsp() + (gen.dsp() if gen else 0)
     bram_used = pipe.bram() + (gen.bram if gen else 0)
@@ -146,7 +153,7 @@ def evaluate_rav(net: NetInfo, fpga: FPGASpec, rav: RAV, dw: int = 16,
     alpha = alpha_for(min(dw, ww))
     dsp_eff = (gops * 1e9) / (alpha * dsp_used * freq) if dsp_used else 0.0
     return DesignPoint(rav, pipe, gen, rate, gops, dsp_used, bram_used,
-                       dsp_eff, feasible)
+                       dsp_eff, latency_s, feasible)
 
 
 # ---------------------------------------------------------------------------
@@ -185,4 +192,4 @@ def dpu_proxy_design(net: NetInfo, fpga: FPGASpec, dw: int = 16, ww: int = 16,
     dsp_eff = (gops * 1e9) / (alpha * gen.dsp() * fpga.freq) if gen.dsp() else 0.0
     rav = RAV(0, batch, 0.0, 0.0, 0.0)
     return DesignPoint(rav, PipelineDesign([], batch), gen, rate, gops,
-                       gen.dsp(), gen.bram, dsp_eff)
+                       gen.dsp(), gen.bram, dsp_eff, lat)

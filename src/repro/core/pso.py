@@ -1,15 +1,23 @@
 """Global optimization: particle-swarm search over the RAV (Algorithm 1).
 
 Each particle is a 5-dim position [SP, Batch, dsp_frac, bram_frac, bw_frac];
-fitness is the throughput returned by the local optimizers
+fitness is the (scalarized) objective returned by the local optimizers
 (:func:`repro.core.local_opt.evaluate_rav`). Early termination fires when the
 global best fails to improve for ``patience`` consecutive iterations (the
 paper uses 2).
+
+The update loop is vectorized: per iteration the whole population is pushed
+through one *batched* fitness call (``batch_fitness_fn``) and personal/global
+bests are refreshed with NumPy where/argmax — no per-particle Python
+bookkeeping. Callers that only have a scalar ``fitness_fn`` get the same
+semantics (the batch is evaluated element-wise); campaign-scale callers
+(:mod:`repro.dse`) hand in a real batch hook so a whole population can be
+evaluated per call.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Sequence
 
 import numpy as np
 
@@ -46,10 +54,24 @@ def _to_rav(pos: np.ndarray) -> RAV:
                bw_frac=float(pos[4]))
 
 
-def optimize(fitness_fn: Callable[[RAV], float], sp_max: int,
-             batch_max: int = 1, cfg: PSOConfig | None = None) -> PSOResult:
-    """Algorithm 1. ``fitness_fn`` must be deterministic (results are memoized
-    on the rounded RAV so repeated positions are free)."""
+def _cache_key(rav: RAV) -> tuple:
+    # Round fractions to 2 decimals for cache hits without losing much.
+    t = rav.as_tuple()
+    return (t[0], t[1], round(t[2], 2), round(t[3], 2), round(t[4], 2))
+
+
+def optimize(fitness_fn: Callable[[RAV], float] | None = None, *,
+             sp_max: int, batch_max: int = 1,
+             cfg: PSOConfig | None = None,
+             batch_fitness_fn: Callable[[Sequence[RAV]], Sequence[float]] | None = None,
+             ) -> PSOResult:
+    """Algorithm 1. Fitness must be deterministic (results are memoized on the
+    rounded RAV so repeated positions are free). Exactly one of ``fitness_fn``
+    (scalar, one RAV per call) or ``batch_fitness_fn`` (whole population per
+    call) is required; with both given the batch hook wins.
+    """
+    if fitness_fn is None and batch_fitness_fn is None:
+        raise TypeError("optimize() needs fitness_fn or batch_fitness_fn")
     cfg = cfg or PSOConfig()
     rng = np.random.default_rng(cfg.seed)
     lo = np.array([0.0, 1.0, 0.05, 0.05, 0.05])
@@ -65,19 +87,29 @@ def optimize(fitness_fn: Callable[[RAV], float], sp_max: int,
     cache: dict[tuple, float] = {}
     evals = 0
 
-    def fit(p: np.ndarray) -> float:
+    def fit_batch(block: np.ndarray) -> np.ndarray:
+        """Fitness for every row of ``block``; uncached keys (deduped, in
+        first-appearance order — same order the old per-particle loop
+        evaluated them) go through one batched call."""
         nonlocal evals
-        rav = _to_rav(p)
-        key = rav.as_tuple()
-        # Round fractions to 2 decimals for cache hits without losing much.
-        key = (key[0], key[1], round(key[2], 2), round(key[3], 2), round(key[4], 2))
-        if key not in cache:
-            cache[key] = fitness_fn(rav)
-            evals += 1
-        return cache[key]
+        ravs = [_to_rav(p) for p in block]
+        keys = [_cache_key(r) for r in ravs]
+        pending: dict[tuple, RAV] = {}
+        for k, r in zip(keys, ravs):
+            if k not in cache and k not in pending:
+                pending[k] = r
+        if pending:
+            if batch_fitness_fn is not None:
+                vals = batch_fitness_fn(list(pending.values()))
+            else:
+                vals = [fitness_fn(r) for r in pending.values()]
+            for k, v in zip(pending, vals):
+                cache[k] = float(v)
+            evals += len(pending)
+        return np.array([cache[k] for k in keys])
 
     pbest = pos.copy()
-    pbest_fit = np.array([fit(p) for p in pos])
+    pbest_fit = fit_batch(pos)
     g_idx = int(np.argmax(pbest_fit))
     gbest, gbest_fit = pbest[g_idx].copy(), float(pbest_fit[g_idx])
 
@@ -91,14 +123,14 @@ def optimize(fitness_fn: Callable[[RAV], float], sp_max: int,
                + cfg.c_local * r1 * (pbest - pos)
                + cfg.c_global * r2 * (gbest[None, :] - pos))
         pos = _clip_round(pos + vel, lo, hi)
-        improved = False
-        for i in range(cfg.population):
-            f = fit(pos[i])
-            if f > pbest_fit[i]:
-                pbest[i], pbest_fit[i] = pos[i].copy(), f
-            if f > gbest_fit:
-                gbest, gbest_fit = pos[i].copy(), f
-                improved = True
+        fits = fit_batch(pos)
+        better = fits > pbest_fit
+        pbest = np.where(better[:, None], pos, pbest)
+        pbest_fit = np.where(better, fits, pbest_fit)
+        best_i = int(np.argmax(fits))
+        improved = bool(fits[best_i] > gbest_fit)
+        if improved:
+            gbest, gbest_fit = pos[best_i].copy(), float(fits[best_i])
         history.append(gbest_fit)
         stale = 0 if improved else stale + 1
         if stale >= cfg.patience:

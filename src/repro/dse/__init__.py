@@ -1,0 +1,52 @@
+"""repro.dse — batch multi-objective DSE campaigns over the paper's flow.
+
+:mod:`repro.core.explorer` runs DNNExplorer's 3-step flow (Fig. 4) for ONE
+(DNN, FPGA) pair and one scalar objective. This package lifts that to the
+campaign scale the paper's evaluation actually operates at ("different
+combinations of DNN workloads and targeted FPGAs", Tables 3/4, Figs. 9-11):
+
+1. *Campaign expansion* — :mod:`repro.dse.campaign` sweeps the cross
+   product of (network x input size x FPGA x precision x batch cap),
+   fanning independent PSO searches out over a process pool with a
+   deterministic seed per cell.
+2. *Multi-objective evaluation* — :mod:`repro.dse.objectives` turns each
+   :class:`repro.core.DesignPoint` into an objective vector (throughput
+   img/s, GOP/s, latency, DSP efficiency, BRAM footprint) plus a
+   scalarization knob; the paper's throughput-only search is the
+   default-weights special case.
+3. *Frontier extraction* — :mod:`repro.dse.pareto` non-dominated-sorts
+   the campaign's designs into Pareto fronts, so "fastest", "smallest"
+   and "most efficient" survive side by side instead of collapsing into
+   one scalar winner.
+4. *Persistence* — :mod:`repro.dse.store` appends every finished cell to
+   a JSON-lines store keyed on (campaign cell, RAV hash); re-running a
+   campaign reuses stored cells, which makes killed campaigns resumable
+   and repeat cells free across runs.
+
+Quickstart (see also ``examples/dse_campaign.py``)::
+
+    python -m repro.dse.campaign --nets vgg16 --fpgas ku115,zcu102 \\
+        --precisions 16,8 --store results/dse.jsonl
+"""
+from .objectives import (OBJECTIVES, ObjectiveSpec, Objectives,
+                         scalarized_objective)
+from .pareto import dominates, non_dominated, nondominated_sort, pareto_front
+from .store import ResultStore, rav_hash
+
+# Campaign exports resolve lazily (PEP 562) so `python -m repro.dse.campaign`
+# doesn't import the module twice (runpy's found-in-sys.modules warning).
+_CAMPAIGN_EXPORTS = ("CampaignCell", "CampaignReport", "cell_seed",
+                     "expand_cells", "run_campaign", "run_cell")
+
+__all__ = [
+    *_CAMPAIGN_EXPORTS, "OBJECTIVES", "ObjectiveSpec", "Objectives",
+    "scalarized_objective", "dominates", "non_dominated",
+    "nondominated_sort", "pareto_front", "ResultStore", "rav_hash",
+]
+
+
+def __getattr__(name: str):
+    if name in _CAMPAIGN_EXPORTS:
+        from . import campaign
+        return getattr(campaign, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

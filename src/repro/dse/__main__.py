@@ -1,0 +1,4 @@
+"""``python -m repro.dse`` == ``python -m repro.dse.campaign``."""
+from .cli import main
+
+main()

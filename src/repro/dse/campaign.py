@@ -1,0 +1,227 @@
+"""Campaign runner: the cross product of (network x input size x FPGA x
+precision x batch cap), one PSO search per cell, fanned out over a process
+pool.
+
+Each *cell* is an independent single-pair exploration (the whole of
+:func:`repro.core.explore`), so campaigns parallelize embarrassingly; the
+pool fans cells out and the JSONL store collects them as they finish.
+Seeds are derived per cell from ``(base_seed, cell key)``, so a campaign's
+results are reproducible regardless of worker count, completion order, or
+which cells a resumed run still has to do.
+
+Run as a module for the CLI::
+
+    python -m repro.dse.campaign --nets vgg16 --fpgas ku115,zcu102 \\
+        --precisions 16,8
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import multiprocessing
+import time
+from concurrent.futures import ProcessPoolExecutor, as_completed
+from typing import Callable, Iterable, Mapping, Sequence
+
+from repro.core.explorer import explore
+from repro.core.hw_specs import FPGAS
+from repro.core.netinfo import NetInfo, TABLE1_NETS, vgg16, vgg19
+from repro.core.pso import PSOConfig
+
+from .objectives import Objectives, scalarized_objective
+from .pareto import non_dominated
+from .store import SCHEMA_VERSION, ResultStore, rav_hash
+
+#: Nets whose input resolution is a campaign axis (the paper's Fig. 1/9/10
+#: sweep). Fixed-topology nets from Table 1 run at their native input.
+RESIZABLE_NETS: dict[str, Callable[[int, int], NetInfo]] = {
+    "vgg16": lambda h, w: vgg16(h, w),
+    "vgg19": lambda h, w: vgg19(h, w, with_fc=False),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignCell:
+    """One point of the campaign grid. ``h == w == 0`` means the network's
+    native input (fixed-topology nets)."""
+
+    net: str
+    h: int
+    w: int
+    fpga: str
+    precision: int   # data & weight bits (the paper quantizes both together)
+    batch_max: int
+
+    @property
+    def key(self) -> str:
+        size = f"{self.h}x{self.w}" if self.h else "native"
+        return (f"net={self.net}|in={size}|fpga={self.fpga}"
+                f"|prec={self.precision}|bmax={self.batch_max}")
+
+
+def build_net(name: str, h: int = 0, w: int = 0) -> NetInfo:
+    if name in RESIZABLE_NETS:
+        if h <= 0:
+            h = w = 224
+        return RESIZABLE_NETS[name](h, w)
+    if name in TABLE1_NETS:
+        return TABLE1_NETS[name]()
+    known = sorted(set(RESIZABLE_NETS) | set(TABLE1_NETS))
+    raise KeyError(f"unknown net {name!r}; known: {known}")
+
+
+def expand_cells(nets: Sequence[str], inputs: Sequence[tuple[int, int]],
+                 fpgas: Sequence[str], precisions: Sequence[int],
+                 batch_caps: Sequence[int]) -> list[CampaignCell]:
+    """The campaign grid. Input sizes multiply only the resizable nets;
+    fixed nets contribute one (native-input) row per remaining axis."""
+    for f in fpgas:
+        if f not in FPGAS:
+            raise KeyError(f"unknown fpga {f!r}; known: {sorted(FPGAS)}")
+    cells = []
+    for net in nets:
+        sizes = list(inputs) if net in RESIZABLE_NETS else [(0, 0)]
+        for h, w in sizes:
+            for fpga in fpgas:
+                for prec in precisions:
+                    for bmax in batch_caps:
+                        cells.append(CampaignCell(net, h, w, fpga, prec, bmax))
+    return cells
+
+
+def cell_seed(base_seed: int, cell: CampaignCell) -> int:
+    """Deterministic PSO seed for one cell: stable across runs, worker
+    counts, and cell orderings."""
+    digest = hashlib.sha256(f"{base_seed}|{cell.key}".encode()).digest()
+    return int.from_bytes(digest[:4], "big") & 0x7FFFFFFF
+
+
+def _search_config(base_seed: int, population: int, iterations: int,
+                   weights: Mapping[str, float] | None) -> dict:
+    """What a record was searched *with*. Stored per record and compared on
+    resume, so a store never silently serves results found under different
+    PSO settings or objective weights. JSON-native values only (the dict
+    must survive a json round trip unchanged)."""
+    return {"base_seed": int(base_seed), "population": int(population),
+            "iterations": int(iterations),
+            "weights": {k: float(v) for k, v in weights.items()} if weights
+            else None}
+
+
+def run_cell(cell: CampaignCell, base_seed: int = 0, population: int = 20,
+             iterations: int = 30,
+             weights: Mapping[str, float] | None = None) -> dict:
+    """One full explore() for one cell -> a store record. Top-level (and all
+    arguments picklable) so ProcessPoolExecutor can ship it to workers."""
+    net = build_net(cell.net, cell.h, cell.w)
+    fpga = FPGAS[cell.fpga]
+    cfg = PSOConfig(population=population, iterations=iterations,
+                    seed=cell_seed(base_seed, cell))
+    res = explore(net, fpga, dw=cell.precision, ww=cell.precision,
+                  batch_max=cell.batch_max, cfg=cfg,
+                  objective=scalarized_objective(weights))
+    d = res.design
+    return {
+        "schema": SCHEMA_VERSION,
+        "cell_key": cell.key,
+        "cell": dataclasses.asdict(cell),
+        "net_name": net.name,
+        "search": _search_config(base_seed, population, iterations, weights),
+        "seed": cfg.seed,
+        "rav": dataclasses.asdict(d.rav),
+        "rav_hash": rav_hash(d.rav),
+        "objectives": Objectives.from_design(d).as_dict(),
+        "fitness": res.pso.best_fitness,
+        "evaluations": res.pso.evaluations,
+        "iterations": res.pso.iterations_run,
+        "search_time_s": round(res.search_time_s, 4),
+        "weights": dict(weights) if weights else None,
+    }
+
+
+@dataclasses.dataclass
+class CampaignReport:
+    cells: list[CampaignCell]
+    records: list[dict]          # one per cell, store order = cells order
+    reused_cells: int
+    new_cells: int
+    new_evaluations: int         # PSO evaluations actually run this time
+    wall_time_s: float
+
+    def feasible(self) -> list[dict]:
+        return [r for r in self.records if r["objectives"]["feasible"]]
+
+    def ranked(self, weights: Mapping[str, float] | None = None) -> list[dict]:
+        recs = self.feasible()
+        score = lambda r: Objectives.from_dict(r["objectives"]).scalarize(weights)
+        return sorted(recs, key=score, reverse=True)
+
+    def frontier(self) -> list[dict]:
+        """First Pareto front across every feasible design in the campaign."""
+        recs = self.feasible()
+        vecs = [Objectives.from_dict(r["objectives"]).canonical() for r in recs]
+        return [recs[i] for i in non_dominated(vecs)]
+
+
+def run_campaign(cells: Iterable[CampaignCell],
+                 store: ResultStore | str, *, base_seed: int = 0,
+                 population: int = 20, iterations: int = 30,
+                 weights: Mapping[str, float] | None = None,
+                 workers: int = 1,
+                 progress: Callable[[str], None] | None = None,
+                 ) -> CampaignReport:
+    """Run (or resume) a campaign against a JSONL store.
+
+    Cells already in the store *with the same search config* (base seed,
+    population, iterations, weights) are reused verbatim — zero new PSO
+    evaluations — so re-running a finished campaign is free and a killed
+    one picks up where it stopped; changing the search config re-runs the
+    affected cells instead of serving stale designs. ``workers > 1`` fans
+    the remaining cells over a spawn-based process pool; results land in
+    the store in completion order, the report in cell order either way.
+    """
+    cells = list(cells)
+    if not isinstance(store, ResultStore):
+        store = ResultStore(store)
+    t0 = time.perf_counter()
+    search = _search_config(base_seed, population, iterations, weights)
+    # A stored cell counts as done only if it was searched with the same
+    # settings; a config change re-runs (and overwrites) stale records.
+    todo = [c for c in cells
+            if (store.get(c.key) or {}).get("search") != search]
+    say = progress or (lambda _msg: None)
+    say(f"campaign: {len(cells)} cells, {len(cells) - len(todo)} reused, "
+        f"{len(todo)} to run (workers={workers})")
+
+    new_evals = 0
+
+    def finish(cell: CampaignCell, rec: dict) -> None:
+        nonlocal new_evals
+        store.put(rec)
+        new_evals += rec["evaluations"]
+        obj = rec["objectives"]
+        say(f"  done {cell.key}: {obj['gops']:.1f} GOP/s, "
+            f"{rec['evaluations']} evals, {rec['search_time_s']:.2f}s")
+
+    if workers > 1 and len(todo) > 1:
+        # spawn, not fork: callers routinely have JAX (multithreaded)
+        # initialized, and forking a threaded parent can deadlock workers.
+        ctx = multiprocessing.get_context("spawn")
+        with ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as pool:
+            futs = {pool.submit(run_cell, c, base_seed, population,
+                                iterations, weights): c for c in todo}
+            for fut in as_completed(futs):
+                finish(futs[fut], fut.result())
+    else:
+        for c in todo:
+            finish(c, run_cell(c, base_seed, population, iterations, weights))
+
+    records = [store.get(c.key) for c in cells]
+    return CampaignReport(cells, records, reused_cells=len(cells) - len(todo),
+                          new_cells=len(todo), new_evaluations=new_evals,
+                          wall_time_s=time.perf_counter() - t0)
+
+
+if __name__ == "__main__":
+    from .cli import main
+    main()

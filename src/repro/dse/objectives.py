@@ -1,0 +1,91 @@
+"""Multi-objective view of a design point, with scalarization knobs.
+
+The analytical models already produce every quantity the related work ranks
+on (HybridDNN: throughput + latency; Being-ahead: resource efficiency); a
+campaign keeps all of them per design instead of collapsing to throughput
+inside the fitness. ``Objectives.canonical()`` maps the vector to pure
+maximization form (minimized objectives negated) so Pareto dominance and
+weighted scalarization are sign-uniform downstream.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+from repro.core.local_opt import DesignPoint
+
+
+@dataclasses.dataclass(frozen=True)
+class ObjectiveSpec:
+    name: str
+    maximize: bool
+    units: str
+
+
+#: Campaign objective vector, in report order.
+OBJECTIVES: tuple[ObjectiveSpec, ...] = (
+    ObjectiveSpec("throughput_ips", True, "img/s"),
+    ObjectiveSpec("gops", True, "GOP/s"),
+    ObjectiveSpec("latency_s", False, "s"),
+    ObjectiveSpec("dsp_eff", True, "frac"),
+    ObjectiveSpec("bram_used", False, "blocks"),
+)
+
+OBJECTIVE_NAMES: tuple[str, ...] = tuple(s.name for s in OBJECTIVES)
+
+#: The paper's original search objective (single-objective special case).
+DEFAULT_WEIGHTS: Mapping[str, float] = {"throughput_ips": 1.0}
+
+
+@dataclasses.dataclass(frozen=True)
+class Objectives:
+    throughput_ips: float
+    gops: float
+    latency_s: float
+    dsp_eff: float
+    bram_used: float
+    feasible: bool = True
+
+    @classmethod
+    def from_design(cls, d: DesignPoint) -> "Objectives":
+        return cls(throughput_ips=d.throughput_ips, gops=d.gops,
+                   latency_s=d.latency_s, dsp_eff=d.dsp_eff,
+                   bram_used=float(d.bram_used), feasible=d.feasible)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "Objectives":
+        return cls(**{f.name: d[f.name] for f in dataclasses.fields(cls)})
+
+    def canonical(self, names: Sequence[str] = OBJECTIVE_NAMES,
+                  ) -> tuple[float, ...]:
+        """Maximization-form vector (minimized objectives negated)."""
+        sense = {s.name: s.maximize for s in OBJECTIVES}
+        vals = dataclasses.asdict(self)
+        return tuple(vals[n] if sense[n] else -vals[n] for n in names)
+
+    def scalarize(self, weights: Mapping[str, float] | None = None) -> float:
+        """Weighted sum over the canonical (max-form) vector. Infeasible
+        designs score 0.0 — with ``DEFAULT_WEIGHTS`` this equals
+        :attr:`DesignPoint.fitness` exactly."""
+        if not self.feasible:
+            return 0.0
+        w = DEFAULT_WEIGHTS if weights is None else weights
+        canon = dict(zip(OBJECTIVE_NAMES, self.canonical()))
+        unknown = set(w) - set(canon)
+        if unknown:
+            raise KeyError(f"unknown objectives: {sorted(unknown)}; "
+                           f"choose from {OBJECTIVE_NAMES}")
+        return sum(wi * canon[n] for n, wi in w.items())
+
+
+def scalarized_objective(weights: Mapping[str, float] | None = None,
+                         ) -> Callable[[DesignPoint], float]:
+    """A ``DesignPoint -> float`` fitness for :func:`repro.core.explore`'s
+    ``objective`` hook (picklable arguments, so campaigns can ship the
+    weights to pool workers and rebuild the closure there)."""
+    def objective(d: DesignPoint) -> float:
+        return Objectives.from_design(d).scalarize(weights)
+    return objective

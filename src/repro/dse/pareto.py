@@ -1,0 +1,60 @@
+"""Pareto dominance and non-dominated sorting (NSGA-II style, O(n^2)).
+
+All functions take vectors in *canonical maximization form* (see
+:meth:`repro.dse.objectives.Objectives.canonical`): every component is
+better when larger. Campaign sizes are hundreds to a few thousand designs,
+so the simple fast-non-dominated-sort is plenty.
+"""
+from __future__ import annotations
+
+from typing import Sequence, TypeVar
+
+T = TypeVar("T")
+
+Vector = Sequence[float]
+
+
+def dominates(a: Vector, b: Vector) -> bool:
+    """True iff ``a`` is >= ``b`` everywhere and > somewhere."""
+    if len(a) != len(b):
+        raise ValueError(f"objective arity mismatch: {len(a)} vs {len(b)}")
+    better = False
+    for ai, bi in zip(a, b):
+        if ai < bi:
+            return False
+        if ai > bi:
+            better = True
+    return better
+
+
+def non_dominated(vectors: Sequence[Vector]) -> list[int]:
+    """Indices of the first Pareto front, in input order. Duplicate vectors
+    all survive (none strictly dominates its copies)."""
+    out = []
+    for i, v in enumerate(vectors):
+        if not any(dominates(u, v) for j, u in enumerate(vectors) if j != i):
+            out.append(i)
+    return out
+
+
+def nondominated_sort(vectors: Sequence[Vector]) -> list[list[int]]:
+    """Successive Pareto fronts: front 0 is non-dominated, front k is
+    non-dominated once fronts < k are removed. Every index appears in
+    exactly one front."""
+    remaining = list(range(len(vectors)))
+    fronts: list[list[int]] = []
+    while remaining:
+        sub = [vectors[i] for i in remaining]
+        keep = set(non_dominated(sub))
+        front = [remaining[j] for j in range(len(remaining)) if j in keep]
+        fronts.append(front)
+        remaining = [remaining[j] for j in range(len(remaining))
+                     if j not in keep]
+    return fronts
+
+
+def pareto_front(items: Sequence[T], vectors: Sequence[Vector]) -> list[T]:
+    """The items whose vectors sit on the first front."""
+    if len(items) != len(vectors):
+        raise ValueError("items/vectors length mismatch")
+    return [items[i] for i in non_dominated(vectors)]

@@ -1,0 +1,79 @@
+"""Persistent campaign results: an append-only JSON-lines store.
+
+One line per finished campaign cell, keyed on the cell key (what was
+searched) and stamped with the RAV hash (what was found). Appending after
+every cell makes a killed campaign resumable from its last completed cell;
+loading keys-last-wins makes re-runs and store concatenation safe. The
+format is deliberately plain JSONL so stores diff, grep, and feed
+``jq``/pandas without a reader.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from pathlib import Path
+from typing import Iterator
+
+from repro.core.local_opt import RAV
+
+SCHEMA_VERSION = 1
+
+
+def rav_hash(rav: RAV) -> str:
+    """Stable short hash of an RAV (fractions rounded to the PSO's cache
+    resolution, so re-discovered designs hash identically)."""
+    t = rav.as_tuple()
+    canon = (t[0], t[1], round(t[2], 2), round(t[3], 2), round(t[4], 2))
+    return hashlib.sha256(repr(canon).encode()).hexdigest()[:12]
+
+
+class ResultStore:
+    """Dict-like view over a JSONL file of campaign cell records."""
+
+    def __init__(self, path: str | os.PathLike):
+        self.path = Path(path)
+        self._records: dict[str, dict] = {}
+        self._load()
+
+    def _load(self) -> None:
+        if not self.path.exists():
+            return
+        with self.path.open() as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue  # torn final line from a killed run
+                key = rec.get("cell_key")
+                if key:
+                    self._records[key] = rec
+
+    def get(self, cell_key: str) -> dict | None:
+        return self._records.get(cell_key)
+
+    def put(self, record: dict) -> None:
+        """Append one record and flush, so a kill right after still leaves
+        the cell on disk."""
+        key = record["cell_key"]
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        with self.path.open("a") as f:
+            f.write(json.dumps(record, sort_keys=True) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        self._records[key] = record
+
+    def __contains__(self, cell_key: str) -> bool:
+        return cell_key in self._records
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def __iter__(self) -> Iterator[dict]:
+        return iter(self._records.values())
+
+    def records(self) -> list[dict]:
+        return list(self._records.values())

@@ -166,10 +166,8 @@ def _moe_mlp_ep_shardmap(x, params, cfg: ArchConfig, mesh, axis: str):
     the data axes. Router + top-k run replicated per model shard; each
     shard computes only its local experts; partial y is psum'd."""
     from jax.sharding import PartitionSpec as P
-    try:
-        from jax import shard_map
-    except ImportError:  # pragma: no cover
-        from jax.experimental.shard_map import shard_map
+
+    from repro.parallel.compat import shard_map
 
     e = cfg.moe
     b, s, d = x.shape

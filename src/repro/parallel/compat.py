@@ -1,0 +1,54 @@
+"""JAX version compatibility for ``shard_map``.
+
+The ``shard_map`` entry point and its keyword surface have churned across
+JAX releases: it moved from ``jax.experimental.shard_map`` to ``jax``
+(>= 0.8), the replication check was renamed ``check_rep`` -> ``check_vma``,
+and ``axis_names`` appeared late. This wrapper feature-detects the installed
+signature once (via :func:`inspect.signature`) and translates/drops keywords
+so call sites can use the modern spelling on any supported JAX.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:
+    from jax import shard_map as _shard_map  # jax >= 0.8
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# Renamed keywords, modern -> legacy. Applied only when the modern name is
+# missing from the installed signature but the legacy one is present.
+_RENAMES = {"check_vma": "check_rep"}
+
+try:
+    _PARAMS = inspect.signature(_shard_map).parameters
+    _ACCEPTED = set(_PARAMS)
+    _HAS_VARKW = any(p.kind is inspect.Parameter.VAR_KEYWORD
+                     for p in _PARAMS.values())
+except (TypeError, ValueError):  # pragma: no cover - C-level callables
+    _ACCEPTED, _HAS_VARKW = set(), True
+
+
+def _translate(kwargs: dict) -> dict:
+    if _HAS_VARKW:
+        return kwargs
+    out = {}
+    for k, v in kwargs.items():
+        if k not in _ACCEPTED and _RENAMES.get(k) in _ACCEPTED:
+            k = _RENAMES[k]
+        if k in _ACCEPTED:
+            out[k] = v
+    return out
+
+
+def shard_map(f, **kwargs):
+    """``shard_map(f, mesh=..., in_specs=..., out_specs=..., ...)`` with
+    unsupported keywords renamed or dropped for the installed JAX."""
+    try:
+        return _shard_map(f, **_translate(kwargs))
+    except TypeError as e:  # signature detection failed us: retry minimal
+        if "unexpected keyword argument" not in str(e):
+            raise
+        core = {k: kwargs[k] for k in ("mesh", "in_specs", "out_specs")
+                if k in kwargs}
+        return _shard_map(f, **core)

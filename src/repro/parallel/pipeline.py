@@ -19,10 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-try:
-    from jax import shard_map  # jax >= 0.8
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+from .compat import shard_map
 
 
 def pipeline_apply(stage_fn, stage_params, x_microbatches, mesh: Mesh,
