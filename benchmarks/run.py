@@ -189,6 +189,32 @@ def bench_dse_campaign() -> list[dict]:
                     f"resume_evals={rerun.new_evaluations}")}]
 
 
+def bench_tpu_campaign() -> list[dict]:
+    """repro.dse tpu backend: a small (arch x shape x chips x remat x mb)
+    campaign — wall time, memoized re-run time, and frontier size/spread."""
+    import tempfile
+
+    from repro.dse import run_campaign
+    from repro.dse.backends import get_backend
+
+    be = get_backend("tpu")
+    cells = be.expand_cells(archs=["starcoder2-3b", "xlstm-350m"],
+                            shapes=["train_4k", "decode_32k"],
+                            chips=[8, 16, 32], remats=("full", "none"),
+                            microbatches=(1, 2))
+    with tempfile.TemporaryDirectory() as td:
+        store = f"{td}/bench_tpu.jsonl"
+        rep, us = _timed(run_campaign, cells, store, backend="tpu")
+        rerun, us2 = _timed(run_campaign, cells, store, backend="tpu")
+    return [{
+        "name": f"dse_campaign_tpu_{len(cells)}cells", "us_per_call": us,
+        "derived": (f"evals={rep.new_evaluations};"
+                    f"frontier={len(rep.frontier())};"
+                    f"frontier_k4={len(rep.frontier(k=4))};"
+                    f"resume_us={us2:.0f};"
+                    f"resume_evals={rerun.new_evaluations}")}]
+
+
 BENCHES = {
     "fig1": bench_fig1_ctc,
     "table1": bench_table1_variance,
@@ -198,6 +224,7 @@ BENCHES = {
     "table3": bench_table3_rav,
     "table4": bench_table4_batch,
     "campaign": bench_dse_campaign,
+    "campaign_tpu": bench_tpu_campaign,
     "roofline": bench_roofline,
 }
 

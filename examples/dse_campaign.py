@@ -1,17 +1,21 @@
-"""Quickstart: a multi-objective DSE campaign with repro.dse.
+"""Quickstart: multi-objective DSE campaigns with repro.dse.
 
 Sweeps VGG-16 at two input sizes across two FPGAs and two precisions
-(8 cells), persists every cell to a JSONL store, then shows the three
-things the campaign engine adds over the single-pair ``explore()``:
+(8 cells), persists every cell to a JSONL store, then shows what the
+campaign engine adds over the single-pair ``explore()``:
 
 1. ranked results under a custom scalarization (throughput + efficiency),
-2. the 5-objective Pareto frontier across all designs, and
-3. free re-runs — the second campaign reuses the store, zero PSO evals.
+2. the 5-objective Pareto frontier across all designs,
+3. free re-runs — the second campaign reuses the store, zero PSO evals,
+4. the same engine pointed at a different device family (`tpu` backend),
+   and a Markdown report rendered from the combined store.
 
     PYTHONPATH=src python examples/dse_campaign.py
 """
-from repro.dse import Objectives, run_campaign
+from repro.dse import Objectives, render_report, run_campaign
+from repro.dse.backends import get_backend
 from repro.dse.campaign import expand_cells
+from repro.dse.store import ResultStore
 
 
 def main():
@@ -38,6 +42,27 @@ def main():
     rerun = run_campaign(cells, store)
     print(f"\n== resume: {rerun.reused_cells}/{len(cells)} cells reused, "
           f"{rerun.new_evaluations} new evaluations ==")
+
+    # Same engine, different device family: sweep the TPU planner's axes
+    # into the SAME store (records are tagged per backend).
+    tpu = get_backend("tpu")
+    tpu_cells = tpu.expand_cells(archs=["starcoder2-3b", "xlstm-350m"],
+                                 shapes=["train_4k", "decode_32k"],
+                                 chips=[8, 16, 32])
+    tpu_report = run_campaign(tpu_cells, store, backend="tpu")
+    print(f"\n== tpu campaign: {len(tpu_cells)} cells, frontier of "
+          f"{len(tpu_report.frontier())}; 4 most-spread designs: ==")
+    for rec in tpu_report.frontier(k=4):
+        o = rec["objectives"]
+        print(f"  {rec['cell_key']}: step {o['step_time_s']:.3g}s, "
+              f"mfu {o['mfu']:.2f}, {o['hbm_gib']:.1f} GiB/chip")
+
+    out = "results/dse_quickstart_report.md"
+    md = render_report(ResultStore(store).records(),
+                       title="dse_campaign.py example")
+    with open(out, "w") as f:
+        f.write(md)
+    print(f"\nreport -> {out} ({len(md)} chars)")
     print("OK")
 
 

@@ -65,15 +65,45 @@ def hbm_per_chip(cfg: ArchConfig, shape: ShapeSpec, mesh: MeshDesc,
     return static + act + cache
 
 
+def factorizations(chips: int):
+    """All power-of-two (dp, tp) splits of a chip count, tp ascending.
+    The chip count itself must be a positive power of two — anything else
+    would silently yield splits with dp * tp != chips."""
+    if chips <= 0 or chips & (chips - 1):
+        raise ValueError(f"chips must be a positive power of two, "
+                         f"got {chips}")
+    tp = 1
+    while tp <= chips:
+        yield chips // tp, tp
+        tp *= 2
+
+
 def candidate_meshes(max_chips: int = 256):
     chips = 8
     while chips <= max_chips:
-        tp = 1
-        while tp <= chips:
-            dp = chips // tp
+        for dp, tp in factorizations(chips):
             yield chips, dp, tp
-            tp *= 2
         chips *= 2
+
+
+def evaluate_point(cfg: ArchConfig, shape: ShapeSpec, chips: int, dp: int,
+                   tp: int, remat: str, microbatches: int,
+                   hw: TPUSpec = TPU_V5E) -> Plan:
+    """Score ONE (mesh x remat x microbatch) mapping with the analytic
+    roofline — the single-design evaluation both :func:`plan_arch` and the
+    ``repro.dse`` TPU campaign backend loop over."""
+    mesh = MeshDesc(chips, dp, tp)
+    rl = analytic_roofline(cfg, shape, mesh, hw)
+    if remat != "full" and shape.kind == "train":
+        # less recompute: scale the compute term 8ND -> 6ND
+        rl = Roofline(rl.t_compute * 0.75, rl.t_memory, rl.t_collective)
+    hbm = hbm_per_chip(cfg, shape, mesh, remat, microbatches)
+    fits = hbm <= hw.hbm_bytes * 0.9
+    step = rl.step_time
+    useful = model_flops(cfg, shape) / chips / hw.peak_flops
+    mfu = min(useful / step, 1.0) if step else 0.0
+    return Plan(cfg.name, shape.name, chips, dp, tp, microbatches, remat,
+                rl, hbm, fits, step, mfu)
 
 
 def plan_arch(cfg: ArchConfig, shape: ShapeSpec, hw: TPUSpec = TPU_V5E,
@@ -84,24 +114,13 @@ def plan_arch(cfg: ArchConfig, shape: ShapeSpec, hw: TPUSpec = TPU_V5E,
     for chips, dp, tp in candidate_meshes(max_chips):
         if shape.global_batch % dp:
             continue
-        mesh = MeshDesc(chips, dp, tp)
         for remat in (("full", "dots", "none") if shape.kind == "train"
                       else ("none",)):
             for mb in (1, 2, 4, 8):
                 if shape.kind != "train" and mb > 1:
                     continue
-                rl = analytic_roofline(cfg, shape, mesh)
-                if remat != "full" and shape.kind == "train":
-                    # less recompute: scale the compute term 8ND -> 6ND
-                    rl = Roofline(rl.t_compute * 0.75, rl.t_memory,
-                                  rl.t_collective)
-                hbm = hbm_per_chip(cfg, shape, mesh, remat, mb)
-                fits = hbm <= hw.hbm_bytes * 0.9
-                step = rl.step_time
-                useful = model_flops(cfg, shape) / chips / hw.peak_flops
-                mfu = min(useful / step, 1.0) if step else 0.0
-                plans.append(Plan(cfg.name, shape.name, chips, dp, tp, mb,
-                                  remat, rl, hbm, fits, step, mfu))
+                plans.append(evaluate_point(cfg, shape, chips, dp, tp,
+                                            remat, mb, hw))
     key = {
         "throughput_per_chip": lambda p: (-p.fits, p.predicted_step_s * p.n_chips),
         "latency": lambda p: (-p.fits, p.predicted_step_s),

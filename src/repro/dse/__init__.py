@@ -1,47 +1,75 @@
-"""repro.dse — batch multi-objective DSE campaigns over the paper's flow.
+"""repro.dse — backend-agnostic multi-objective DSE campaigns.
 
 :mod:`repro.core.explorer` runs DNNExplorer's 3-step flow (Fig. 4) for ONE
 (DNN, FPGA) pair and one scalar objective. This package lifts that to the
 campaign scale the paper's evaluation actually operates at ("different
-combinations of DNN workloads and targeted FPGAs", Tables 3/4, Figs. 9-11):
+combinations of DNN workloads and targeted FPGAs", Tables 3/4, Figs. 9-11)
+— and widens "targeted FPGAs" to targeted *device families*:
 
-1. *Campaign expansion* — :mod:`repro.dse.campaign` sweeps the cross
-   product of (network x input size x FPGA x precision x batch cap),
-   fanning independent PSO searches out over a process pool with a
-   deterministic seed per cell.
-2. *Multi-objective evaluation* — :mod:`repro.dse.objectives` turns each
-   :class:`repro.core.DesignPoint` into an objective vector (throughput
-   img/s, GOP/s, latency, DSP efficiency, BRAM footprint) plus a
-   scalarization knob; the paper's throughput-only search is the
-   default-weights special case.
-3. *Frontier extraction* — :mod:`repro.dse.pareto` non-dominated-sorts
-   the campaign's designs into Pareto fronts, so "fastest", "smallest"
-   and "most efficient" survive side by side instead of collapsing into
-   one scalar winner.
-4. *Persistence* — :mod:`repro.dse.store` appends every finished cell to
-   a JSON-lines store keyed on (campaign cell, RAV hash); re-running a
-   campaign reuses stored cells, which makes killed campaigns resumable
-   and repeat cells free across runs.
+1. *Backends* — :mod:`repro.dse.backends` gives each device family a
+   campaign contract: an objective schema, cell expansion over that
+   family's axes, per-cell evaluation, and a resume-match search config.
+   The ``fpga`` backend (default) sweeps (network x input size x FPGA x
+   precision x batch cap) with one PSO search per cell; the ``tpu``
+   backend sweeps (arch x shape x chip count x remat x microbatches)
+   through the analytic planner in :mod:`repro.core.tpu_planner`.
+2. *Campaign running* — :mod:`repro.dse.campaign` fans a backend's cells
+   out over a process pool with deterministic per-cell seeds, collecting
+   records into a resumable JSONL store as they finish.
+3. *Multi-objective evaluation* — :mod:`repro.dse.objectives` defines the
+   schema machinery (canonical maximization form, weighted
+   scalarization); each backend declares its own vector (FPGA:
+   throughput img/s, GOP/s, latency, DSP efficiency, BRAM; TPU: step
+   time, MFU, HBM per chip, chips used).
+4. *Frontier extraction* — :mod:`repro.dse.pareto` non-dominated-sorts
+   the campaign's designs into Pareto fronts and, NSGA-II-style, orders
+   them by crowding distance so a truncated frontier is a SPREAD across
+   the trade-off surface (extremes kept, clumps thinned);
+   ``CampaignReport.frontier(k=N)`` returns the N most-diverse designs.
+5. *Persistence* — :mod:`repro.dse.store` appends every finished cell to
+   a JSON-lines store keyed on the cell key; re-running a campaign reuses
+   stored cells, which makes killed campaigns resumable and repeat cells
+   free across runs. FPGA records are byte-compatible with PR-1 stores.
+6. *Reporting* — :mod:`repro.dse.report` renders any store (plus optional
+   ``benchmarks/run.py --json`` output) into a Markdown campaign report:
+   frontier tables, per-workload winners, objective trade-off summaries.
 
-Quickstart (see also ``examples/dse_campaign.py``)::
+Quickstart (see also ``examples/dse_campaign.py`` and ``README.md``)::
 
+    # FPGA campaign (the paper's flow; default backend):
     python -m repro.dse.campaign --nets vgg16 --fpgas ku115,zcu102 \\
         --precisions 16,8 --store results/dse.jsonl
+
+    # TPU campaign (beyond-paper retarget of the same engine):
+    python -m repro.dse.campaign --backend tpu --archs starcoder2-3b,xlstm-350m \\
+        --shapes train_4k,decode_32k --chips 8,16,32 --store results/dse_tpu.jsonl
+
+    # Markdown report (frontier tables, per-workload winners, trade-offs):
+    python -m repro.dse.report results/dse.jsonl --out docs/reports/fpga.md
+    python -m repro.dse.report results/dse_tpu.jsonl --out docs/reports/tpu.md
 """
 from .objectives import (OBJECTIVES, ObjectiveSpec, Objectives,
+                         canonical_vector, scalarize_values,
                          scalarized_objective)
-from .pareto import dominates, non_dominated, nondominated_sort, pareto_front
+from .pareto import (crowding_distance, dominates, non_dominated,
+                     nondominated_sort, pareto_front, select_diverse)
 from .store import ResultStore, rav_hash
 
-# Campaign exports resolve lazily (PEP 562) so `python -m repro.dse.campaign`
-# doesn't import the module twice (runpy's found-in-sys.modules warning).
+# Campaign/backend/report exports resolve lazily (PEP 562) so
+# `python -m repro.dse.campaign` / `python -m repro.dse.report` don't
+# import their module twice (runpy's found-in-sys.modules warning).
 _CAMPAIGN_EXPORTS = ("CampaignCell", "CampaignReport", "cell_seed",
                      "expand_cells", "run_campaign", "run_cell")
+_BACKEND_EXPORTS = ("BACKENDS", "Backend", "FPGABackend", "TPUBackend",
+                    "TPUCell", "TPU_OBJECTIVES", "get_backend")
+_REPORT_EXPORTS = ("fixture_records", "render_report")
 
 __all__ = [
-    *_CAMPAIGN_EXPORTS, "OBJECTIVES", "ObjectiveSpec", "Objectives",
-    "scalarized_objective", "dominates", "non_dominated",
-    "nondominated_sort", "pareto_front", "ResultStore", "rav_hash",
+    *_CAMPAIGN_EXPORTS, *_BACKEND_EXPORTS, *_REPORT_EXPORTS,
+    "OBJECTIVES", "ObjectiveSpec", "Objectives", "canonical_vector",
+    "scalarize_values", "scalarized_objective", "crowding_distance",
+    "dominates", "non_dominated", "nondominated_sort", "pareto_front",
+    "select_diverse", "ResultStore", "rav_hash",
 ]
 
 
@@ -49,4 +77,10 @@ def __getattr__(name: str):
     if name in _CAMPAIGN_EXPORTS:
         from . import campaign
         return getattr(campaign, name)
+    if name in _BACKEND_EXPORTS:
+        from . import backends
+        return getattr(backends, name)
+    if name in _REPORT_EXPORTS:
+        from . import report
+        return getattr(report, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

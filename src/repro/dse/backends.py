@@ -1,0 +1,458 @@
+"""Campaign backends: one accelerator family == one backend.
+
+DNNExplorer's claim is a *dynamic* design space that adapts to "different
+combinations of DNN workloads and targeted FPGAs"; this module widens
+"targeted FPGAs" to *targeted device families*. A :class:`Backend` bundles
+everything :func:`repro.dse.campaign.run_campaign` needs to sweep one
+family:
+
+* an **objective schema** (:class:`repro.dse.objectives.ObjectiveSpec`
+  tuple + default scalarization weights) — Pareto dominance, crowding
+  diversity, ranking, and reports all derive from it generically;
+* **cell expansion** — the cross product of that family's campaign axes
+  into picklable cell dataclasses with stable ``.key`` strings;
+* **cell evaluation** — ``run_cell(cell) -> store record``, the unit the
+  process pool fans out and the JSONL store memoizes;
+* a **search config** dict stored per record and compared on resume, so a
+  store never silently serves results found under different settings;
+* presentation/CLI hooks (table rows, progress headlines, axis flags).
+
+Two backends ship:
+
+``fpga``
+    The paper's flow, byte-compatible with PR-1 stores: cells are
+    (net x input x FPGA x precision x batch cap), each evaluated by a full
+    PSO :func:`repro.core.explore`; records carry no ``backend`` field so
+    existing stores resume unchanged.
+
+``tpu``
+    The beyond-paper retarget: cells are (arch x shape x chip count x
+    remat x microbatches), each evaluated by enumerating the power-of-two
+    (dp, tp) factorizations of the chip count through
+    :func:`repro.core.tpu_planner.evaluate_point` and keeping the best
+    mapping under the cell's scalarization. Objectives: step time, MFU,
+    per-chip HBM (with the HBM-fit feasibility gate), chips used.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+import time
+from typing import Mapping, Sequence
+
+from repro.configs import ARCH_IDS, SHAPES, cell_enabled, get_config
+from repro.core.hw_specs import FPGAS
+from repro.core.netinfo import TABLE1_NETS
+from repro.core.tpu_planner import evaluate_point, factorizations
+
+from .objectives import (DEFAULT_WEIGHTS, OBJECTIVES, ObjectiveSpec,
+                         canonical_vector, scalarize_values)
+from .store import SCHEMA_VERSION
+
+
+# ---------------------------------------------------------------------------
+# CLI axis parsing (shared by both backends; re-exported by repro.dse.cli)
+# ---------------------------------------------------------------------------
+
+
+def _csv(text: str) -> list[str]:
+    return [t.strip() for t in text.split(",") if t.strip()]
+
+
+def parse_inputs(text: str) -> list[tuple[int, int]]:
+    """``"224,320x480"`` -> ``[(224, 224), (320, 480)]``."""
+    out = []
+    for tok in _csv(text):
+        h, _, w = tok.partition("x")
+        out.append((int(h), int(w or h)))
+    return out
+
+
+def parse_weights(text: str) -> dict[str, float] | None:
+    """``"throughput_ips=1,dsp_eff=500"`` -> weight dict (None if empty)."""
+    if not text:
+        return None
+    out = {}
+    for tok in _csv(text):
+        name, _, val = tok.partition("=")
+        out[name] = float(val) if val else 1.0
+    return out
+
+
+# ---------------------------------------------------------------------------
+# protocol
+# ---------------------------------------------------------------------------
+
+
+class Backend(abc.ABC):
+    """One device family's campaign contract (see module docstring)."""
+
+    name: str
+    objectives: tuple[ObjectiveSpec, ...]
+    default_weights: Mapping[str, float]
+    default_store: str
+
+    # -- objective-vector helpers (schema-generic, shared) ------------------
+
+    def objective_names(self) -> tuple[str, ...]:
+        return tuple(s.name for s in self.objectives)
+
+    def canonical(self, objectives: Mapping[str, float]) -> tuple[float, ...]:
+        """A record's ``objectives`` dict -> maximization-form vector."""
+        return canonical_vector(objectives, self.objectives)
+
+    def scalarize(self, objectives: Mapping,
+                  weights: Mapping[str, float] | None = None) -> float:
+        """Weighted canonical sum; infeasible records score 0.0."""
+        return scalarize_values(objectives, self.objectives, weights,
+                                self.default_weights)
+
+    # -- campaign contract ---------------------------------------------------
+
+    @abc.abstractmethod
+    def expand_cells(self, **axes) -> list:
+        """Cross product of this backend's campaign axes -> cell list."""
+
+    @abc.abstractmethod
+    def run_cell(self, cell, *, base_seed: int = 0, population: int = 20,
+                 iterations: int = 30,
+                 weights: Mapping[str, float] | None = None) -> dict:
+        """Evaluate ONE cell -> a JSONL store record."""
+
+    @abc.abstractmethod
+    def search_config(self, *, base_seed: int, population: int,
+                      iterations: int,
+                      weights: Mapping[str, float] | None) -> dict:
+        """The settings a record was searched with (resume-match key)."""
+
+    # -- presentation --------------------------------------------------------
+
+    @abc.abstractmethod
+    def headline(self, rec: dict) -> str:
+        """One-line progress metric for a finished cell."""
+
+    @abc.abstractmethod
+    def group_key(self, rec: dict) -> str:
+        """Workload grouping for per-cell-winner report tables."""
+
+    @abc.abstractmethod
+    def table_header(self) -> str: ...
+
+    @abc.abstractmethod
+    def table_row(self, rec: dict) -> str: ...
+
+    # -- CLI -----------------------------------------------------------------
+
+    @abc.abstractmethod
+    def add_axis_arguments(self, ap) -> None:
+        """Register this backend's campaign-axis flags on the parser."""
+
+    @abc.abstractmethod
+    def cells_from_args(self, args) -> list:
+        """Parsed argparse namespace -> expanded cell list."""
+
+
+# ---------------------------------------------------------------------------
+# fpga — the paper's flow (byte-compatible with PR-1 stores)
+# ---------------------------------------------------------------------------
+
+
+class FPGABackend(Backend):
+    """DNNExplorer's own design space: one PSO search per campaign cell.
+
+    Thin delegation onto :mod:`repro.dse.campaign`'s original module-level
+    functions (imported lazily; campaign imports this module's registry).
+    Records and search configs are IDENTICAL to what PR 1 wrote, so
+    pre-existing stores resume with zero re-evaluation.
+    """
+
+    name = "fpga"
+    objectives = OBJECTIVES
+    default_weights = DEFAULT_WEIGHTS
+    default_store = "results/dse_campaign.jsonl"
+
+    def expand_cells(self, *, nets: Sequence[str],
+                     inputs: Sequence[tuple[int, int]],
+                     fpgas: Sequence[str], precisions: Sequence[int],
+                     batch_caps: Sequence[int]) -> list:
+        from .campaign import expand_cells
+        return expand_cells(nets, inputs, fpgas, precisions, batch_caps)
+
+    def run_cell(self, cell, *, base_seed=0, population=20, iterations=30,
+                 weights=None) -> dict:
+        from .campaign import run_cell
+        return run_cell(cell, base_seed, population, iterations, weights)
+
+    def search_config(self, *, base_seed, population, iterations,
+                      weights) -> dict:
+        from .campaign import _search_config
+        return _search_config(base_seed, population, iterations, weights)
+
+    def headline(self, rec: dict) -> str:
+        return f"{rec['objectives']['gops']:.1f} GOP/s"
+
+    def group_key(self, rec: dict) -> str:
+        c = rec["cell"]
+        size = f"{c['h']}x{c['w']}" if c.get("h") else "native"
+        return f"{c['net']}@{size}"
+
+    def table_header(self) -> str:
+        return (f"{'cell':<48} {'rav':<10} {'img/s':>8} {'GOP/s':>8} "
+                f"{'lat_ms':>8} {'eff':>6} {'bram':>6}")
+
+    def table_row(self, rec: dict) -> str:
+        o, r = rec["objectives"], rec["rav"]
+        return (f"{rec['cell_key']:<48} sp={r['sp']:>2} b={r['batch']:>2} "
+                f"{o['throughput_ips']:>8.1f} {o['gops']:>8.1f} "
+                f"{o['latency_s'] * 1e3:>8.2f} {o['dsp_eff']:>6.3f} "
+                f"{int(o['bram_used']):>6}")
+
+    def add_axis_arguments(self, ap) -> None:
+        from .campaign import RESIZABLE_NETS
+        g = ap.add_argument_group("fpga campaign axes")
+        g.add_argument("--nets", default="vgg16",
+                       help="comma list; resizable: %s; fixed: %s" % (
+                           ",".join(RESIZABLE_NETS),
+                           ",".join(n for n in TABLE1_NETS
+                                    if n not in RESIZABLE_NETS)))
+        g.add_argument("--inputs", default="224",
+                       help="comma list of H or HxW for resizable nets")
+        g.add_argument("--fpgas", default="ku115",
+                       help="comma list from: " + ",".join(sorted(FPGAS)))
+        g.add_argument("--precisions", default="16",
+                       help="comma list of bit-widths (data == weights)")
+        g.add_argument("--batch-caps", default="1",
+                       help="comma list of PSO batch upper bounds")
+
+    def cells_from_args(self, args) -> list:
+        return self.expand_cells(
+            nets=_csv(args.nets), inputs=parse_inputs(args.inputs),
+            fpgas=_csv(args.fpgas),
+            precisions=[int(p) for p in _csv(args.precisions)],
+            batch_caps=[int(b) for b in _csv(args.batch_caps)])
+
+
+# ---------------------------------------------------------------------------
+# tpu — the beyond-paper retarget over repro.core.tpu_planner
+# ---------------------------------------------------------------------------
+
+#: TPU campaign objective vector, in report order. ``hbm_gib`` is the
+#: per-chip HBM demand; the 90%-of-HBM fit check is the feasibility gate.
+TPU_OBJECTIVES: tuple[ObjectiveSpec, ...] = (
+    ObjectiveSpec("step_time_s", False, "s"),
+    ObjectiveSpec("mfu", True, "frac"),
+    ObjectiveSpec("hbm_gib", False, "GiB"),
+    ObjectiveSpec("chips", False, "chips"),
+)
+
+#: Latency-first by default (the planner's own primary sort); campaigns
+#: re-weight with e.g. ``mfu=1`` or ``chips=-...`` for efficiency sweeps.
+TPU_DEFAULT_WEIGHTS: Mapping[str, float] = {"step_time_s": 1.0}
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUCell:
+    """One point of the TPU campaign grid: a (workload, mapping-budget)
+    pair. The dp x tp factorization of ``chips`` is NOT an axis — it is
+    searched inside the cell (the local step), mirroring how an FPGA cell
+    searches its RAV inside :func:`repro.core.explore`."""
+
+    arch: str
+    shape: str
+    chips: int
+    remat: str
+    microbatches: int
+
+    @property
+    def key(self) -> str:
+        return (f"arch={self.arch}|shape={self.shape}|chips={self.chips}"
+                f"|remat={self.remat}|mb={self.microbatches}")
+
+
+class TPUBackend(Backend):
+    """Sweep (arch x shape x chips x remat x microbatches) through the
+    analytic TPU planner; per cell, keep the best (dp, tp) mapping under
+    the cell's scalarization (feasible mappings first)."""
+
+    name = "tpu"
+    objectives = TPU_OBJECTIVES
+    default_weights = TPU_DEFAULT_WEIGHTS
+    default_store = "results/dse_campaign_tpu.jsonl"
+
+    def expand_cells(self, *, archs: Sequence[str], shapes: Sequence[str],
+                     chips: Sequence[int],
+                     remats: Sequence[str] = ("full", "dots", "none"),
+                     microbatches: Sequence[int] = (1, 2, 4)) -> list[TPUCell]:
+        """The TPU campaign grid. Remat and microbatching only exist for
+        training shapes: inference shapes collapse those axes to
+        ``(none, 1)`` and contribute one row per remaining axis. Cells the
+        spec disables (e.g. full attention at 500k context) are skipped."""
+        for s in shapes:
+            if s not in SHAPES:
+                raise KeyError(f"unknown shape {s!r}; known: {sorted(SHAPES)}")
+        for c in chips:
+            if c <= 0 or c & (c - 1):
+                raise ValueError(f"chips must be a positive power of two "
+                                 f"(got {c}); the planner factorizes the "
+                                 f"mesh into power-of-two dp x tp ways")
+        for r in remats:
+            if r not in ("full", "dots", "none"):
+                raise ValueError(f"unknown remat policy {r!r}; "
+                                 f"choose from full, dots, none")
+        cells, seen = [], set()
+        for arch in archs:
+            cfg = get_config(arch)  # raises KeyError on unknown arch
+            for shape_name in shapes:
+                shape = SHAPES[shape_name]
+                enabled, _why = cell_enabled(cfg, shape)
+                if not enabled:
+                    continue
+                train = shape.kind == "train"
+                for n in chips:
+                    for remat in (remats if train else ("none",)):
+                        for mb in (microbatches if train else (1,)):
+                            cell = TPUCell(arch, shape_name, n, remat, mb)
+                            if cell.key not in seen:
+                                seen.add(cell.key)
+                                cells.append(cell)
+        return cells
+
+    def run_cell(self, cell: TPUCell, *, base_seed=0, population=20,
+                 iterations=30, weights=None) -> dict:
+        """Enumerate the (dp, tp) factorizations of the cell's chip count;
+        keep the best mapping: feasible first, then highest scalarized
+        objective (ties to the earlier factorization — smaller tp)."""
+        t0 = time.perf_counter()
+        cfg = get_config(cell.arch)
+        shape = SHAPES[cell.shape]
+        best, best_rank, evaluated = None, None, 0
+        for dp, tp in factorizations(cell.chips):
+            if shape.global_batch % dp:
+                continue
+            plan = evaluate_point(cfg, shape, cell.chips, dp, tp,
+                                  cell.remat, cell.microbatches)
+            evaluated += 1
+            obj = self._plan_objectives(cell, plan)
+            # rank ignoring the feasibility gate (an all-infeasible cell
+            # still reports its least-bad mapping), feasible plans first
+            raw = scalarize_values({**obj, "feasible": True},
+                                   self.objectives, weights,
+                                   self.default_weights)
+            rank = (plan.fits, raw)
+            if best_rank is None or rank > best_rank:
+                best, best_rank = (plan, obj), rank
+        if best is None:
+            raise ValueError(f"no valid dp x tp factorization for {cell.key} "
+                             f"(global_batch={shape.global_batch})")
+        plan, obj = best
+        return {
+            "schema": SCHEMA_VERSION,
+            "backend": self.name,
+            "cell_key": cell.key,
+            "cell": dataclasses.asdict(cell),
+            "arch_name": cfg.name,
+            "search": self.search_config(base_seed=base_seed,
+                                         population=population,
+                                         iterations=iterations,
+                                         weights=weights),
+            "plan": {"dp": plan.dp, "tp": plan.tp,
+                     "bound": plan.roofline.bound},
+            "objectives": obj,
+            "fitness": self.scalarize(obj, weights),
+            "evaluations": evaluated,
+            "search_time_s": round(time.perf_counter() - t0, 4),
+            "weights": dict(weights) if weights else None,
+        }
+
+    @staticmethod
+    def _plan_objectives(cell: TPUCell, plan) -> dict:
+        return {
+            "step_time_s": plan.predicted_step_s,
+            "mfu": plan.mfu,
+            "hbm_gib": plan.hbm_per_chip / 2**30,
+            "chips": float(cell.chips),
+            "feasible": bool(plan.fits),
+        }
+
+    def search_config(self, *, base_seed, population, iterations,
+                      weights) -> dict:
+        """The planner enumerates its space exhaustively and
+        deterministically, so PSO knobs and seeds are irrelevant here;
+        only the scalarization (which picks the per-cell mapping)
+        invalidates stored cells."""
+        return {"weights": {k: float(v) for k, v in weights.items()}
+                if weights else None}
+
+    def headline(self, rec: dict) -> str:
+        o = rec["objectives"]
+        return (f"step={o['step_time_s']:.3g}s mfu={o['mfu']:.2f} "
+                f"hbm={o['hbm_gib']:.1f}GiB")
+
+    def group_key(self, rec: dict) -> str:
+        c = rec["cell"]
+        return f"{c['arch']}/{c['shape']}"
+
+    def table_header(self) -> str:
+        return (f"{'cell':<58} {'dpxtp':<8} {'step_s':>10} {'mfu':>6} "
+                f"{'hbm_gib':>8} {'chips':>6} {'bound':<10}")
+
+    def table_row(self, rec: dict) -> str:
+        o, p = rec["objectives"], rec["plan"]
+        return (f"{rec['cell_key']:<58} {p['dp']}x{p['tp']:<6} "
+                f"{o['step_time_s']:>10.4g} {o['mfu']:>6.3f} "
+                f"{o['hbm_gib']:>8.2f} {int(o['chips']):>6} {p['bound']:<10}")
+
+    def add_axis_arguments(self, ap) -> None:
+        g = ap.add_argument_group("tpu campaign axes")
+        g.add_argument("--archs", default="starcoder2-3b",
+                       help="comma list from: " + ",".join(ARCH_IDS))
+        g.add_argument("--shapes", default="train_4k,decode_32k",
+                       help="comma list from: " + ",".join(SHAPES))
+        g.add_argument("--chips", default="8,16,32",
+                       help="comma list of chip counts (powers of two)")
+        g.add_argument("--remats", default="full,dots,none",
+                       help="comma list of remat policies (train shapes)")
+        g.add_argument("--microbatches", default="1,2,4",
+                       help="comma list of microbatch counts (train shapes)")
+
+    def cells_from_args(self, args) -> list[TPUCell]:
+        return self.expand_cells(
+            archs=_csv(args.archs), shapes=_csv(args.shapes),
+            chips=[int(c) for c in _csv(args.chips)],
+            remats=tuple(_csv(args.remats)),
+            microbatches=tuple(int(m) for m in _csv(args.microbatches)))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+BACKENDS: dict[str, Backend] = {b.name: b for b in (FPGABackend(),
+                                                    TPUBackend())}
+
+
+def get_backend(backend: str | Backend) -> Backend:
+    """Resolve a backend by name (or pass an instance through)."""
+    if isinstance(backend, Backend):
+        return backend
+    try:
+        return BACKENDS[backend]
+    except KeyError:
+        raise KeyError(f"unknown backend {backend!r}; "
+                       f"known: {sorted(BACKENDS)}") from None
+
+
+def record_backend(rec: Mapping) -> str:
+    """Which backend wrote a store record. Legacy (PR-1) FPGA records
+    predate the field and carry no ``backend`` key."""
+    return rec.get("backend", "fpga")
+
+
+def run_cell_by_backend(backend_name: str, cell, base_seed: int,
+                        population: int, iterations: int,
+                        weights: Mapping[str, float] | None) -> dict:
+    """Top-level (picklable) pool entry point: resolve the backend by name
+    in the worker and evaluate one cell."""
+    return get_backend(backend_name).run_cell(
+        cell, base_seed=base_seed, population=population,
+        iterations=iterations, weights=weights)

@@ -1,18 +1,25 @@
-"""Campaign runner: the cross product of (network x input size x FPGA x
-precision x batch cap), one PSO search per cell, fanned out over a process
-pool.
+"""Campaign runner: a backend's campaign grid, one search per cell, fanned
+out over a process pool.
 
-Each *cell* is an independent single-pair exploration (the whole of
-:func:`repro.core.explore`), so campaigns parallelize embarrassingly; the
-pool fans cells out and the JSONL store collects them as they finish.
-Seeds are derived per cell from ``(base_seed, cell key)``, so a campaign's
-results are reproducible regardless of worker count, completion order, or
-which cells a resumed run still has to do.
+Each *cell* is an independent single-workload exploration (FPGA: the whole
+of :func:`repro.core.explore`; TPU: a mapping enumeration through
+:mod:`repro.core.tpu_planner` — see :mod:`repro.dse.backends`), so
+campaigns parallelize embarrassingly; the pool fans cells out and the
+JSONL store collects them as they finish. FPGA seeds are derived per cell
+from ``(base_seed, cell key)``, so a campaign's results are reproducible
+regardless of worker count, completion order, or which cells a resumed run
+still has to do.
+
+The module-level grid/evaluation functions here (``expand_cells``,
+``run_cell``, ...) are the FPGA backend's implementation — kept at module
+level both for backward compatibility and so pool workers can pickle them.
 
 Run as a module for the CLI::
 
     python -m repro.dse.campaign --nets vgg16 --fpgas ku115,zcu102 \\
         --precisions 16,8
+    python -m repro.dse.campaign --backend tpu --archs starcoder2-3b \\
+        --shapes train_4k --chips 8,16
 """
 from __future__ import annotations
 
@@ -21,7 +28,7 @@ import hashlib
 import multiprocessing
 import time
 from concurrent.futures import ProcessPoolExecutor, as_completed
-from typing import Callable, Iterable, Mapping, Sequence
+from typing import TYPE_CHECKING, Callable, Iterable, Mapping, Sequence
 
 from repro.core.explorer import explore
 from repro.core.hw_specs import FPGAS
@@ -29,8 +36,11 @@ from repro.core.netinfo import NetInfo, TABLE1_NETS, vgg16, vgg19
 from repro.core.pso import PSOConfig
 
 from .objectives import Objectives, scalarized_objective
-from .pareto import non_dominated
+from .pareto import non_dominated, select_diverse
 from .store import SCHEMA_VERSION, ResultStore, rav_hash
+
+if TYPE_CHECKING:  # pragma: no cover - circular-import-free type hints
+    from .backends import Backend
 
 #: Nets whose input resolution is a campaign axis (the paper's Fig. 1/9/10
 #: sweep). Fixed-topology nets from Table 1 run at their native input.
@@ -141,66 +151,92 @@ def run_cell(cell: CampaignCell, base_seed: int = 0, population: int = 20,
 
 @dataclasses.dataclass
 class CampaignReport:
-    cells: list[CampaignCell]
+    cells: list                  # backend cells (CampaignCell, TPUCell, ...)
     records: list[dict]          # one per cell, store order = cells order
     reused_cells: int
     new_cells: int
-    new_evaluations: int         # PSO evaluations actually run this time
+    new_evaluations: int         # search evaluations actually run this time
     wall_time_s: float
+    backend: "Backend | None" = None   # None == fpga (PR-1 compatibility)
+
+    def _backend(self) -> "Backend":
+        if self.backend is None:
+            from .backends import get_backend
+            self.backend = get_backend("fpga")
+        return self.backend
 
     def feasible(self) -> list[dict]:
         return [r for r in self.records if r["objectives"]["feasible"]]
 
     def ranked(self, weights: Mapping[str, float] | None = None) -> list[dict]:
+        be = self._backend()
         recs = self.feasible()
-        score = lambda r: Objectives.from_dict(r["objectives"]).scalarize(weights)
-        return sorted(recs, key=score, reverse=True)
+        return sorted(recs, key=lambda r: be.scalarize(r["objectives"],
+                                                       weights), reverse=True)
 
-    def frontier(self) -> list[dict]:
-        """First Pareto front across every feasible design in the campaign."""
+    def frontier(self, k: int | None = None) -> list[dict]:
+        """Pareto-optimal designs across every feasible one in the campaign.
+
+        ``k=None`` returns the whole first front in campaign-cell order
+        (the original behavior). With ``k``, NSGA-II selection returns up
+        to ``k`` designs ordered by (front rank, crowding distance): a
+        SPREAD across the trade-off surface — extremes always included,
+        clumps thinned — topped up from later fronts when the first front
+        has fewer than ``k`` members.
+        """
+        be = self._backend()
         recs = self.feasible()
-        vecs = [Objectives.from_dict(r["objectives"]).canonical() for r in recs]
-        return [recs[i] for i in non_dominated(vecs)]
+        vecs = [be.canonical(r["objectives"]) for r in recs]
+        if k is None:
+            return [recs[i] for i in non_dominated(vecs)]
+        return [recs[i] for i in select_diverse(vecs, k)]
 
 
-def run_campaign(cells: Iterable[CampaignCell],
+def run_campaign(cells: Iterable,
                  store: ResultStore | str, *, base_seed: int = 0,
                  population: int = 20, iterations: int = 30,
                  weights: Mapping[str, float] | None = None,
                  workers: int = 1,
                  progress: Callable[[str], None] | None = None,
+                 backend: "str | Backend" = "fpga",
                  ) -> CampaignReport:
     """Run (or resume) a campaign against a JSONL store.
 
-    Cells already in the store *with the same search config* (base seed,
-    population, iterations, weights) are reused verbatim — zero new PSO
-    evaluations — so re-running a finished campaign is free and a killed
-    one picks up where it stopped; changing the search config re-runs the
-    affected cells instead of serving stale designs. ``workers > 1`` fans
-    the remaining cells over a spawn-based process pool; results land in
-    the store in completion order, the report in cell order either way.
+    ``backend`` selects the device family (``"fpga"`` — the default and
+    the paper's flow — or ``"tpu"``; see :mod:`repro.dse.backends`) and
+    must match the cells. Cells already in the store *with the same search
+    config* (for FPGA: base seed, population, iterations, weights) are
+    reused verbatim — zero new search evaluations — so re-running a
+    finished campaign is free and a killed one picks up where it stopped;
+    changing the search config re-runs the affected cells instead of
+    serving stale designs. ``workers > 1`` fans the remaining cells over a
+    spawn-based process pool; results land in the store in completion
+    order, the report in cell order either way.
     """
+    from .backends import get_backend, run_cell_by_backend
+    be = get_backend(backend)
     cells = list(cells)
     if not isinstance(store, ResultStore):
         store = ResultStore(store)
     t0 = time.perf_counter()
-    search = _search_config(base_seed, population, iterations, weights)
+    search = be.search_config(base_seed=base_seed, population=population,
+                              iterations=iterations, weights=weights)
     # A stored cell counts as done only if it was searched with the same
     # settings; a config change re-runs (and overwrites) stale records.
     todo = [c for c in cells
             if (store.get(c.key) or {}).get("search") != search]
     say = progress or (lambda _msg: None)
-    say(f"campaign: {len(cells)} cells, {len(cells) - len(todo)} reused, "
+    say(f"campaign[{be.name}]: {len(cells)} cells, "
+        f"{len(cells) - len(todo)} reused, "
         f"{len(todo)} to run (workers={workers})")
 
     new_evals = 0
 
-    def finish(cell: CampaignCell, rec: dict) -> None:
+    def finish(cell, rec: dict) -> None:
         nonlocal new_evals
         store.put(rec)
         new_evals += rec["evaluations"]
-        obj = rec["objectives"]
-        say(f"  done {cell.key}: {obj['gops']:.1f} GOP/s, "
+        say(f"  done {cell.key}: {be.headline(rec)}, "
             f"{rec['evaluations']} evals, {rec['search_time_s']:.2f}s")
 
     if workers > 1 and len(todo) > 1:
@@ -208,18 +244,21 @@ def run_campaign(cells: Iterable[CampaignCell],
         # initialized, and forking a threaded parent can deadlock workers.
         ctx = multiprocessing.get_context("spawn")
         with ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as pool:
-            futs = {pool.submit(run_cell, c, base_seed, population,
-                                iterations, weights): c for c in todo}
+            futs = {pool.submit(run_cell_by_backend, be.name, c, base_seed,
+                                population, iterations, weights): c
+                    for c in todo}
             for fut in as_completed(futs):
                 finish(futs[fut], fut.result())
     else:
         for c in todo:
-            finish(c, run_cell(c, base_seed, population, iterations, weights))
+            finish(c, be.run_cell(c, base_seed=base_seed,
+                                  population=population,
+                                  iterations=iterations, weights=weights))
 
     records = [store.get(c.key) for c in cells]
     return CampaignReport(cells, records, reused_cells=len(cells) - len(todo),
                           new_cells=len(todo), new_evaluations=new_evals,
-                          wall_time_s=time.perf_counter() - t0)
+                          wall_time_s=time.perf_counter() - t0, backend=be)
 
 
 if __name__ == "__main__":

@@ -1,8 +1,14 @@
-"""CLI for DSE campaigns: ranked report + Pareto frontier dump.
+"""CLI for DSE campaigns: ranked report + Pareto frontier dump, for any
+registered backend (``--backend fpga`` is the default and the paper's
+flow; ``--backend tpu`` sweeps the analytic TPU planner).
 
     python -m repro.dse.campaign --nets vgg16,alexnet --fpgas ku115,zcu102 \\
         --precisions 16,8 --batch-caps 1,8 --workers 4 \\
         --store results/dse.jsonl --frontier-json results/frontier.json
+
+    python -m repro.dse.campaign --backend tpu --archs starcoder2-3b \\
+        --shapes train_4k,decode_32k --chips 8,16,32 \\
+        --store results/dse_tpu.jsonl
 """
 from __future__ import annotations
 
@@ -10,125 +16,93 @@ import argparse
 import json
 import os
 
-from repro.core.hw_specs import FPGAS
-from repro.core.netinfo import TABLE1_NETS
-
-from .campaign import (RESIZABLE_NETS, CampaignReport, expand_cells,
-                       run_campaign)
-from .objectives import DEFAULT_WEIGHTS, OBJECTIVES
+from .backends import (BACKENDS, get_backend, parse_inputs,  # noqa: F401
+                       parse_weights)
+from .campaign import CampaignReport, run_campaign
+from .pareto import non_dominated, select_diverse
 from .store import ResultStore
 
 
-def _csv(text: str) -> list[str]:
-    return [t.strip() for t in text.split(",") if t.strip()]
-
-
-def parse_inputs(text: str) -> list[tuple[int, int]]:
-    """``"224,320x480"`` -> ``[(224, 224), (320, 480)]``."""
-    out = []
-    for tok in _csv(text):
-        h, _, w = tok.partition("x")
-        out.append((int(h), int(w or h)))
-    return out
-
-
-def parse_weights(text: str) -> dict[str, float] | None:
-    """``"throughput_ips=1,dsp_eff=500"`` -> weight dict (None if empty)."""
-    if not text:
-        return None
-    out = {}
-    for tok in _csv(text):
-        name, _, val = tok.partition("=")
-        out[name] = float(val) if val else 1.0
-    return out
-
-
-def _row(rec: dict) -> str:
-    o, r = rec["objectives"], rec["rav"]
-    return (f"{rec['cell_key']:<48} sp={r['sp']:>2} b={r['batch']:>2} "
-            f"{o['throughput_ips']:>8.1f} {o['gops']:>8.1f} "
-            f"{o['latency_s'] * 1e3:>8.2f} {o['dsp_eff']:>6.3f} "
-            f"{int(o['bram_used']):>6}")
-
-
-_HEADER = (f"{'cell':<48} {'rav':<10} {'img/s':>8} {'GOP/s':>8} "
-           f"{'lat_ms':>8} {'eff':>6} {'bram':>6}")
-
-
 def print_report(report: CampaignReport, weights: dict | None,
-                 top: int) -> None:
-    print(f"\n== campaign: {len(report.cells)} cells "
+                 top: int) -> list[dict]:
+    """Print the ranked + frontier tables; returns the first Pareto front
+    (in campaign-cell order) so callers can reuse it without redoing the
+    O(n^2) dominance sort."""
+    be = report._backend()
+    print(f"\n== campaign[{be.name}]: {len(report.cells)} cells "
           f"({report.new_cells} new, {report.reused_cells} reused; "
           f"{report.new_evaluations} new evaluations, "
           f"{report.wall_time_s:.1f}s) ==")
 
-    shown = dict(weights or DEFAULT_WEIGHTS)
+    shown = dict(weights or be.default_weights)
     print(f"\n-- top {top} by scalarized objective {shown} --")
-    print(_HEADER)
+    print(be.table_header())
     for rec in report.ranked(weights)[:top]:
-        print(_row(rec))
+        print(be.table_row(rec))
 
-    front = report.frontier()
+    feas = report.feasible()
+    vecs = [be.canonical(r["objectives"]) for r in feas]
+    front_idx = non_dominated(vecs)
+    front = [feas[i] for i in front_idx]
     names = ", ".join(f"{s.name}[{'max' if s.maximize else 'min'}]"
-                      for s in OBJECTIVES)
+                      for s in be.objectives)
     print(f"\n-- Pareto frontier: {len(front)} of "
-          f"{len(report.feasible())} feasible designs ({names}) --")
-    print(_HEADER)
-    for rec in front:
-        print(_row(rec))
+          f"{len(feas)} feasible designs ({names}) --")
+    print(be.table_header())
+    # print the frontier as a diversity-ordered spread (rank, then
+    # crowding distance) so a truncated read-off still covers the surface
+    for j in select_diverse([vecs[i] for i in front_idx], len(front_idx)):
+        print(be.table_row(front[j]))
+    return front
 
 
 def main(argv: list[str] | None = None) -> CampaignReport:
     ap = argparse.ArgumentParser(
         prog="python -m repro.dse.campaign",
-        description="Batch multi-objective DSE campaign over "
-                    "(net x input x FPGA x precision x batch cap).")
-    ap.add_argument("--nets", default="vgg16",
-                    help="comma list; resizable: %s; fixed: %s" % (
-                        ",".join(RESIZABLE_NETS),
-                        ",".join(n for n in TABLE1_NETS
-                                 if n not in RESIZABLE_NETS)))
-    ap.add_argument("--inputs", default="224",
-                    help="comma list of H or HxW for resizable nets")
-    ap.add_argument("--fpgas", default="ku115",
-                    help="comma list from: " + ",".join(sorted(FPGAS)))
-    ap.add_argument("--precisions", default="16",
-                    help="comma list of bit-widths (data == weights)")
-    ap.add_argument("--batch-caps", default="1",
-                    help="comma list of PSO batch upper bounds")
-    ap.add_argument("--store", default="results/dse_campaign.jsonl",
-                    help="JSONL result store (resumable/memoized)")
+        description="Batch multi-objective DSE campaign over a backend's "
+                    "axis grid (fpga: net x input x FPGA x precision x "
+                    "batch cap; tpu: arch x shape x chips x remat x "
+                    "microbatches).")
+    ap.add_argument("--backend", choices=sorted(BACKENDS), default="fpga",
+                    help="device family to sweep (default: fpga, the "
+                         "paper's flow)")
+    for be in BACKENDS.values():
+        be.add_axis_arguments(ap)
+    ap.add_argument("--store", default=None,
+                    help="JSONL result store (resumable/memoized; default "
+                         "per backend, e.g. results/dse_campaign.jsonl)")
     ap.add_argument("--workers", type=int, default=1,
                     help="process-pool width; 0 = one per CPU")
     ap.add_argument("--population", type=int, default=20)
     ap.add_argument("--iterations", type=int, default=30)
     ap.add_argument("--seed", type=int, default=0,
-                    help="base seed; per-cell seeds derive from it")
+                    help="base seed; per-cell seeds derive from it "
+                         "(fpga only; the tpu planner is deterministic)")
     ap.add_argument("--weights", default="",
                     help="scalarization, e.g. throughput_ips=1,dsp_eff=500 "
-                         "(default: throughput only, the paper's objective)")
+                         "(fpga default: throughput only, the paper's "
+                         "objective; tpu default: step_time_s)")
     ap.add_argument("--top", type=int, default=8, help="ranked rows to print")
     ap.add_argument("--frontier-json", default=None,
                     help="also dump the frontier records to this JSON file")
     args = ap.parse_args(argv)
 
+    backend = get_backend(args.backend)
     weights = parse_weights(args.weights)
     workers = args.workers if args.workers > 0 else (os.cpu_count() or 1)
-    cells = expand_cells(_csv(args.nets), parse_inputs(args.inputs),
-                         _csv(args.fpgas),
-                         [int(p) for p in _csv(args.precisions)],
-                         [int(b) for b in _csv(args.batch_caps)])
-    report = run_campaign(cells, ResultStore(args.store),
+    cells = backend.cells_from_args(args)
+    store_path = args.store or backend.default_store
+    report = run_campaign(cells, ResultStore(store_path),
                           base_seed=args.seed, population=args.population,
                           iterations=args.iterations, weights=weights,
-                          workers=workers, progress=print)
-    print_report(report, weights, args.top)
+                          workers=workers, progress=print, backend=backend)
+    front = print_report(report, weights, args.top)
 
     if args.frontier_json:
         with open(args.frontier_json, "w") as f:
-            json.dump(report.frontier(), f, indent=2, sort_keys=True)
+            json.dump(front, f, indent=2, sort_keys=True)
         print(f"\nfrontier -> {args.frontier_json}")
-    print(f"store -> {args.store}")
+    print(f"store -> {store_path}")
     return report
 
 

@@ -6,6 +6,15 @@ campaign keeps all of them per design instead of collapsing to throughput
 inside the fitness. ``Objectives.canonical()`` maps the vector to pure
 maximization form (minimized objectives negated) so Pareto dominance and
 weighted scalarization are sign-uniform downstream.
+
+Two layers live here:
+
+* the *generic* helpers (:func:`canonical_vector`,
+  :func:`scalarize_values`) work on any ``{name: value}`` objectives dict
+  against any :class:`ObjectiveSpec` schema — each campaign backend
+  (:mod:`repro.dse.backends`) declares its own schema and reuses these;
+* the FPGA-specific :class:`Objectives` dataclass (the paper's five
+  quantities) keeps the original typed API and record layout.
 """
 from __future__ import annotations
 
@@ -35,6 +44,35 @@ OBJECTIVE_NAMES: tuple[str, ...] = tuple(s.name for s in OBJECTIVES)
 
 #: The paper's original search objective (single-objective special case).
 DEFAULT_WEIGHTS: Mapping[str, float] = {"throughput_ips": 1.0}
+
+
+def canonical_vector(values: Mapping[str, float],
+                     specs: Sequence[ObjectiveSpec]) -> tuple[float, ...]:
+    """``{name: value}`` -> maximization-form tuple in spec order
+    (minimized objectives negated). Schema-generic: works for any
+    backend's objective dict."""
+    return tuple(float(values[s.name]) if s.maximize else -float(values[s.name])
+                 for s in specs)
+
+
+def scalarize_values(values: Mapping, specs: Sequence[ObjectiveSpec],
+                     weights: Mapping[str, float] | None = None,
+                     default_weights: Mapping[str, float] | None = None,
+                     ) -> float:
+    """Weighted sum over the canonical (max-form) vector of any backend's
+    objectives dict. Infeasible designs (``values["feasible"]`` falsy)
+    score 0.0. Unknown weight names raise ``KeyError``."""
+    if not values.get("feasible", True):
+        return 0.0
+    w = weights if weights is not None else (default_weights or
+                                             {specs[0].name: 1.0})
+    names = tuple(s.name for s in specs)
+    canon = dict(zip(names, canonical_vector(values, specs)))
+    unknown = set(w) - set(canon)
+    if unknown:
+        raise KeyError(f"unknown objectives: {sorted(unknown)}; "
+                       f"choose from {names}")
+    return sum(wi * canon[n] for n, wi in w.items())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,15 +108,8 @@ class Objectives:
         """Weighted sum over the canonical (max-form) vector. Infeasible
         designs score 0.0 — with ``DEFAULT_WEIGHTS`` this equals
         :attr:`DesignPoint.fitness` exactly."""
-        if not self.feasible:
-            return 0.0
-        w = DEFAULT_WEIGHTS if weights is None else weights
-        canon = dict(zip(OBJECTIVE_NAMES, self.canonical()))
-        unknown = set(w) - set(canon)
-        if unknown:
-            raise KeyError(f"unknown objectives: {sorted(unknown)}; "
-                           f"choose from {OBJECTIVE_NAMES}")
-        return sum(wi * canon[n] for n, wi in w.items())
+        return scalarize_values(self.as_dict(), OBJECTIVES, weights,
+                                DEFAULT_WEIGHTS)
 
 
 def scalarized_objective(weights: Mapping[str, float] | None = None,

@@ -1,12 +1,20 @@
-"""Pareto dominance and non-dominated sorting (NSGA-II style, O(n^2)).
+"""Pareto dominance, non-dominated sorting, and crowding-distance
+diversity (NSGA-II style, O(n^2)).
 
 All functions take vectors in *canonical maximization form* (see
 :meth:`repro.dse.objectives.Objectives.canonical`): every component is
 better when larger. Campaign sizes are hundreds to a few thousand designs,
 so the simple fast-non-dominated-sort is plenty.
+
+:func:`crowding_distance` and :func:`select_diverse` implement NSGA-II's
+diversity preservation (Deb et al., 2002): when a frontier must be
+truncated to *k* designs, keep the ones whose objective-space neighbors
+are farthest apart, so the survivors SPREAD across the trade-off surface
+instead of clumping around one region of it.
 """
 from __future__ import annotations
 
+import math
 from typing import Sequence, TypeVar
 
 T = TypeVar("T")
@@ -58,3 +66,50 @@ def pareto_front(items: Sequence[T], vectors: Sequence[Vector]) -> list[T]:
     if len(items) != len(vectors):
         raise ValueError("items/vectors length mismatch")
     return [items[i] for i in non_dominated(vectors)]
+
+
+def crowding_distance(vectors: Sequence[Vector]) -> list[float]:
+    """NSGA-II crowding distance of each vector within its set.
+
+    Per objective, vectors are sorted and each interior one is credited
+    the (normalized) gap between its two neighbors; boundary vectors get
+    ``inf`` so extremes always survive truncation. Larger distance ==
+    lonelier == more diverse. Degenerate objectives (all values equal)
+    contribute nothing.
+    """
+    n = len(vectors)
+    if n == 0:
+        return []
+    if n == 1:
+        return [math.inf]
+    dist = [0.0] * n
+    for d in range(len(vectors[0])):
+        order = sorted(range(n), key=lambda i: vectors[i][d])
+        lo, hi = vectors[order[0]][d], vectors[order[-1]][d]
+        if hi == lo:
+            continue  # degenerate objective: no extremes, no gaps
+        dist[order[0]] = dist[order[-1]] = math.inf
+        for j in range(1, n - 1):
+            if dist[order[j]] != math.inf:
+                dist[order[j]] += ((vectors[order[j + 1]][d]
+                                    - vectors[order[j - 1]][d]) / (hi - lo))
+    return dist
+
+
+def select_diverse(vectors: Sequence[Vector], k: int) -> list[int]:
+    """Up to ``k`` indices by NSGA-II ranking: whole fronts in order, the
+    last partially-admitted front truncated to its most-spread members
+    (rank ties broken by crowding distance, then by input order for
+    determinism). With ``k >= len(vectors)`` this is a diversity-sorted
+    permutation of everything."""
+    if k <= 0:
+        return []
+    out: list[int] = []
+    for front in nondominated_sort(vectors):
+        cd = crowding_distance([vectors[i] for i in front])
+        by_spread = sorted(range(len(front)), key=lambda j: (-cd[j], front[j]))
+        for j in by_spread:
+            if len(out) >= k:
+                return out
+            out.append(front[j])
+    return out

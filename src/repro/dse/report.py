@@ -1,0 +1,301 @@
+"""Markdown campaign reports from JSONL stores (+ optional bench JSON).
+
+The ROADMAP's "perf-trajectory dashboard": turn any
+:class:`repro.dse.store.ResultStore` — FPGA, TPU, or a mixed store — into
+a human-readable Markdown report under ``docs/reports/``:
+
+* per-backend **Pareto frontier tables**, ordered by NSGA-II rank +
+  crowding distance so a truncated read-off still spreads across the
+  trade-off surface (extremes first, clumps thinned);
+* **per-workload winners** (best scalarized design per net@input / per
+  arch/shape), following HybridDNN's practice of reporting the
+  efficiency/latency trade-off per workload rather than a single scalar;
+* **objective trade-off summaries** — for each objective, the frontier
+  design that is best at it and what that choice costs on the others;
+* an optional **benchmark appendix** from ``benchmarks/run.py --json``
+  output, so paper-figure reproductions land in the same document.
+
+CLI (also ``python -m repro.dse.report``)::
+
+    python -m repro.dse.report results/dse.jsonl --out docs/reports/fpga.md
+    python -m repro.dse.report results/dse_tpu.jsonl --bench bench.json
+    python -m repro.dse.report --selftest   # render the built-in fixture
+
+``--selftest`` renders a small built-in fixture store through the full
+pipeline and fails loudly if anything in the render path regresses — CI
+runs it as the docs check.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Mapping, Sequence
+
+from .backends import BACKENDS, get_backend, record_backend
+from .pareto import non_dominated, select_diverse
+from .store import ResultStore
+
+#: Where reports land unless --out says otherwise.
+DEFAULT_REPORT_DIR = Path("docs/reports")
+
+
+# ---------------------------------------------------------------------------
+# markdown helpers
+# ---------------------------------------------------------------------------
+
+
+def _fmt(v) -> str:
+    if isinstance(v, bool):
+        return "yes" if v else "no"
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def _table(headers: Sequence[str], rows: Sequence[Sequence]) -> list[str]:
+    # cell keys contain "|" (the axis separator) — escape so Markdown
+    # doesn't read them as column breaks
+    esc = lambda v: _fmt(v).replace("|", "\\|")
+    out = ["| " + " | ".join(esc(h) for h in headers) + " |",
+           "|" + "|".join(" --- " for _ in headers) + "|"]
+    for row in rows:
+        out.append("| " + " | ".join(esc(v) for v in row) + " |")
+    return out
+
+
+def _objective_columns(be) -> list[str]:
+    return [f"{s.name} ({'max' if s.maximize else 'min'}, {s.units})"
+            for s in be.objectives]
+
+
+def _objective_values(be, rec: Mapping) -> list:
+    return [rec["objectives"][s.name] for s in be.objectives]
+
+
+# ---------------------------------------------------------------------------
+# report body
+# ---------------------------------------------------------------------------
+
+
+def _backend_section(name: str, recs: list[dict], k: int) -> list[str]:
+    be = get_backend(name)
+    feas = [r for r in recs if r["objectives"].get("feasible")]
+    lines = [f"## Backend `{name}` — {len(recs)} cells, "
+             f"{len(feas)} feasible", ""]
+    lines += ["Objectives: " + ", ".join(
+        f"`{s.name}` ({'max' if s.maximize else 'min'}, {s.units})"
+        for s in be.objectives), ""]
+    if not feas:
+        lines += ["_No feasible designs in this store._", ""]
+        return lines
+
+    vecs = [be.canonical(r["objectives"]) for r in feas]
+    front_idx = non_dominated(vecs)
+    front = [feas[i] for i in front_idx]
+    fvecs = [vecs[i] for i in front_idx]
+    # diversity order: whole front sorted by crowding so the top rows
+    # are the spread, not a clump around one region
+    order = select_diverse(fvecs, len(fvecs))
+
+    lines += [f"### Pareto frontier ({len(front)} of {len(feas)} feasible, "
+              f"crowding-distance order)", ""]
+    cols = ["cell"] + _objective_columns(be)
+    rows = [[f"`{front[i]['cell_key']}`"] + _objective_values(be, front[i])
+            for i in order[:len(front) if k <= 0 else k]]
+    shown = len(rows)
+    lines += _table(cols, rows)
+    if shown < len(front):
+        lines += ["", f"_{len(front) - shown} more frontier designs in the "
+                      f"store (rerun with `--top {len(front)}`)._"]
+    lines += [""]
+
+    # per-workload winners under the backend's default scalarization
+    groups: dict[str, list[dict]] = {}
+    for r in feas:
+        groups.setdefault(be.group_key(r), []).append(r)
+    lines += [f"### Per-workload winners "
+              f"(best by default weights {dict(be.default_weights)})", ""]
+    rows = []
+    for g in sorted(groups):
+        win = max(groups[g], key=lambda r: be.scalarize(r["objectives"]))
+        rows.append([g, f"`{win['cell_key']}`"]
+                    + _objective_values(be, win))
+    lines += _table(["workload", "cell"] + _objective_columns(be), rows)
+    lines += [""]
+
+    # trade-off summary: the frontier specialist per objective
+    lines += ["### Objective trade-offs (frontier specialist per "
+              "objective)", ""]
+    rows = []
+    for j, spec in enumerate(be.objectives):
+        best_i = max(range(len(front)), key=lambda i: fvecs[i][j])
+        rows.append([f"`{spec.name}`", f"`{front[best_i]['cell_key']}`"]
+                    + _objective_values(be, front[best_i]))
+    lines += _table(["best at", "cell"] + _objective_columns(be), rows)
+    lines += [""]
+    return lines
+
+
+def _bench_section(bench: Mapping) -> list[str]:
+    lines = ["## Benchmark appendix (`benchmarks/run.py --json`)", ""]
+    for name in sorted(bench.get("benchmarks", {})):
+        rows = bench["benchmarks"][name]
+        lines += [f"### `{name}`", ""]
+        lines += _table(["row", "us/call", "derived"],
+                        [[r["name"], f"{r['us_per_call']:.1f}",
+                          f"`{r['derived']}`"] for r in rows])
+        lines += [""]
+    return lines
+
+
+def render_report(records: Sequence[Mapping], *,
+                  title: str = "DSE campaign report",
+                  bench: Mapping | None = None, k: int = 12) -> str:
+    """Records (any mix of backends) -> a Markdown report string.
+
+    ``k`` caps each frontier table at the k most-spread designs
+    (NSGA-II rank + crowding order); ``k <= 0`` means no cap.
+    """
+    groups: dict[str, list[dict]] = {}
+    for r in records:
+        groups.setdefault(record_backend(r), []).append(r)
+    lines = [f"# {title}", "",
+             f"{len(records)} campaign cells across "
+             f"{len(groups)} backend(s): "
+             + ", ".join(f"`{n}`" for n in sorted(groups)) + ".", ""]
+    for name in sorted(groups):
+        if name not in BACKENDS:
+            lines += [f"## Backend `{name}` — {len(groups[name])} cells "
+                      f"(unknown backend; skipped)", ""]
+            continue
+        lines += _backend_section(name, groups[name], k)
+    if bench:
+        lines += _bench_section(bench)
+    return "\n".join(lines).rstrip() + "\n"
+
+
+# ---------------------------------------------------------------------------
+# selftest fixture
+# ---------------------------------------------------------------------------
+
+
+def fixture_records() -> list[dict]:
+    """A tiny deterministic two-backend store: enough shape variety to
+    exercise frontier extraction, crowding order, winner grouping, and
+    trade-off tables without running any search."""
+    recs = []
+    fpga_pts = [  # (net, h, fpga, ips, gops, lat_ms, eff, bram, feasible)
+        ("vgg16", 224, "ku115", 145.0, 4220.0, 6.9, 0.764, 1800, True),
+        ("vgg16", 224, "zcu102", 66.0, 1930.0, 15.2, 0.771, 1100, True),
+        ("vgg16", 64, "ku115", 1630.0, 3950.0, 0.61, 0.716, 1350, True),
+        ("vgg16", 64, "zcu102", 760.0, 1840.0, 1.31, 0.733, 960, True),
+        ("alexnet", 0, "ku115", 2250.0, 3280.0, 0.44, 0.594, 820, True),
+        ("alexnet", 0, "zcu102", 990.0, 1450.0, 1.01, 0.577, 640, False),
+    ]
+    for net, h, fpga, ips, gops, lat, eff, bram, ok in fpga_pts:
+        size = f"{h}x{h}" if h else "native"
+        recs.append({
+            "schema": 1,
+            "cell_key": f"net={net}|in={size}|fpga={fpga}|prec=16|bmax=1",
+            "cell": {"net": net, "h": h, "w": h, "fpga": fpga,
+                     "precision": 16, "batch_max": 1},
+            "rav": {"sp": 4, "batch": 1, "f_dsp": 0.9, "f_bram": 0.8,
+                    "f_bw": 0.7},
+            "objectives": {"throughput_ips": ips, "gops": gops,
+                           "latency_s": lat / 1e3, "dsp_eff": eff,
+                           "bram_used": float(bram), "feasible": ok},
+            "search": {"base_seed": 0, "population": 20, "iterations": 30,
+                       "weights": None},
+            "evaluations": 600,
+        })
+    tpu_pts = [  # (arch, shape, chips, remat, mb, dp, tp, step, mfu, hbm, ok)
+        ("starcoder2-3b", "train_4k", 8, "full", 2, 8, 1, 18.1, 0.52,
+         10.4, True),
+        ("starcoder2-3b", "train_4k", 16, "full", 2, 16, 1, 9.1, 0.51,
+         5.2, True),
+        ("starcoder2-3b", "train_4k", 16, "none", 2, 16, 1, 6.8, 0.58,
+         24.7, False),
+        ("starcoder2-3b", "decode_32k", 8, "none", 1, 8, 1, 0.021, 0.03,
+         15.7, True),
+        ("xlstm-350m", "train_4k", 8, "full", 1, 8, 1, 1.28, 0.47,
+         2.4, True),
+        ("xlstm-350m", "decode_32k", 8, "none", 1, 8, 1, 0.00064, 0.06,
+         0.4, True),
+    ]
+    for arch, shape, chips, remat, mb, dp, tp, step, mfu, hbm, ok in tpu_pts:
+        recs.append({
+            "schema": 1,
+            "backend": "tpu",
+            "cell_key": (f"arch={arch}|shape={shape}|chips={chips}"
+                         f"|remat={remat}|mb={mb}"),
+            "cell": {"arch": arch, "shape": shape, "chips": chips,
+                     "remat": remat, "microbatches": mb},
+            "plan": {"dp": dp, "tp": tp, "bound": "compute"},
+            "objectives": {"step_time_s": step, "mfu": mfu, "hbm_gib": hbm,
+                           "chips": float(chips), "feasible": ok},
+            "search": {"weights": None},
+            "evaluations": 4,
+        })
+    return recs
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.dse.report",
+        description="Render a Markdown campaign report from a JSONL store "
+                    "(plus optional benchmarks/run.py --json output).")
+    ap.add_argument("store", nargs="?", default=None,
+                    help="campaign JSONL store (any backend or a mix)")
+    ap.add_argument("--bench", default=None, metavar="JSON",
+                    help="benchmarks/run.py --json output to append")
+    ap.add_argument("--out", default=None, metavar="MD",
+                    help="output path (default: docs/reports/<store-stem>.md)")
+    ap.add_argument("--title", default=None)
+    ap.add_argument("--top", type=int, default=12,
+                    help="frontier rows per backend, crowding-ordered "
+                         "(<= 0: all)")
+    ap.add_argument("--selftest", action="store_true",
+                    help="render the built-in fixture store and exit "
+                         "(the CI docs check); writes nothing")
+    args = ap.parse_args(argv)
+
+    if args.selftest:
+        md = render_report(fixture_records(), title="selftest campaign",
+                           k=args.top)
+        for must in ("Pareto frontier", "Backend `fpga`", "Backend `tpu`",
+                     "Per-workload winners", "Objective trade-offs"):
+            if must not in md:
+                raise SystemExit(f"selftest: section {must!r} missing "
+                                 f"from rendered report")
+        print(f"selftest OK: rendered {len(md)} chars, "
+              f"{md.count(chr(10))} lines, all sections present")
+        return 0
+
+    if not args.store:
+        ap.error("a store path is required (or use --selftest)")
+    store = ResultStore(args.store)
+    if not len(store):
+        ap.error(f"store {args.store} is empty or missing")
+    bench = None
+    if args.bench:
+        with open(args.bench) as f:
+            bench = json.load(f)
+    title = args.title or f"DSE campaign report — {Path(args.store).name}"
+    md = render_report(store.records(), title=title, bench=bench, k=args.top)
+    out = Path(args.out) if args.out else \
+        DEFAULT_REPORT_DIR / f"{Path(args.store).stem}.md"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(md)
+    print(f"report -> {out} ({len(md)} chars, "
+          f"{len(store)} cells, backends: {', '.join(store.backends())})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -75,5 +75,15 @@ class ResultStore:
     def __iter__(self) -> Iterator[dict]:
         return iter(self._records.values())
 
-    def records(self) -> list[dict]:
-        return list(self._records.values())
+    def records(self, backend: str | None = None) -> list[dict]:
+        """All records, optionally only one backend's. Legacy (PR-1)
+        records carry no ``backend`` field and count as ``"fpga"``."""
+        recs = list(self._records.values())
+        if backend is None:
+            return recs
+        return [r for r in recs if r.get("backend", "fpga") == backend]
+
+    def backends(self) -> list[str]:
+        """Backend names present in the store, sorted."""
+        return sorted({r.get("backend", "fpga")
+                       for r in self._records.values()})

@@ -7,6 +7,13 @@ collectives inside scans are likewise invisible. This module parses
 by their ``known_trip_count`` backend config, and descends into fusions —
 yielding exact per-device dot/conv FLOPs and collective traffic for
 scan-based graphs (validated against unrolled lowerings in tests).
+
+The parser is HLO-print-version-aware: older XLA prints operands as bare
+``%name`` references (resolved through the computation's symbol table),
+newer XLA (jax >= 0.4.3x) inlines each operand's full shape
+(``dot(f32[4,32,64]{2,1,0} %a, ...)``), whose dims/layouts contain commas
+and parens. Operand lists are therefore split at top-level commas only,
+and shapes come from the operand text itself when present.
 """
 from __future__ import annotations
 
@@ -40,6 +47,52 @@ def _shapes_in(text: str) -> list[tuple[str, list[int]]]:
         if dt in _DTYPE_BYTES:
             out.append((dt, [int(d) for d in dims.split(",") if d]))
     return out
+
+
+def _split_operands(text: str) -> list[str]:
+    """Split an operand list on top-level commas only. Newer XLA prints
+    typed operands (``f32[4,32,64]{2,1,0} %x``) whose dims/layouts contain
+    commas, so a plain ``split(",")`` tears shapes apart."""
+    parts, cur, depth = [], [], 0
+    for ch in text:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    tail = "".join(cur).strip()
+    if tail:
+        parts.append(tail)
+    return parts
+
+
+def _operand_body(rest: str, start: int) -> str:
+    """The text between the op's ``(`` (at ``start``) and its matching
+    ``)``. Typed operands can nest parens (tuple shapes), so track depth
+    instead of cutting at the first ``)``."""
+    depth = 1
+    for i in range(start, len(rest)):
+        ch = rest[i]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rest[start:i]
+    return rest[start:]
+
+
+def _operand_shape(token: str, symtab: dict[str, str]) -> str:
+    """Shape text of one operand token, HLO-version-aware: newer XLA
+    inlines the shape in the operand itself; older XLA prints bare
+    ``%name`` references that resolve through the symbol table."""
+    if _SHAPE.search(token):
+        return token
+    return symtab.get(token.strip().lstrip("%"), "")
 
 
 def _numel_bytes(text: str) -> tuple[int, int]:
@@ -83,7 +136,7 @@ def _parse_computation(header_args: str, lines: list[str],
             continue
         result = rest[:om.start()]
         op = om.group(1)
-        operands = rest[om.end():].split(")", 1)[0]
+        operands = _split_operands(_operand_body(rest, om.end()))
         symtab[name] = result
         parsed.append((line, result, op, operands))
 
@@ -93,11 +146,9 @@ def _parse_computation(header_args: str, lines: list[str],
         if not fusion_body and op not in _FREE_OPS:
             _, rb = _numel_bytes(result)
             ob = 0
-            for name_ in operands.split(","):
-                name_ = name_.strip().lstrip("%")
-                if name_ in symtab:
-                    _, b_ = _numel_bytes(symtab[name_])
-                    ob += b_
+            for tok in operands:
+                _, b_ = _numel_bytes(_operand_shape(tok, symtab))
+                ob += b_
             comp.mem_bytes += rb + ob
 
         base = op[:-6] if op.endswith("-start") else op
@@ -109,8 +160,7 @@ def _parse_computation(header_args: str, lines: list[str],
 
         if op == "dot":
             numel, _ = _numel_bytes(result)
-            lhs_name = operands.split(",")[0].strip().lstrip("%")
-            lhs_shape_text = symtab.get(lhs_name, "")
+            lhs_shape_text = _operand_shape(operands[0], symtab) if operands else ""
             shapes = _shapes_in(lhs_shape_text)
             cm = _LHS_CONTRACT.search(line)
             kprod = 1
@@ -127,11 +177,9 @@ def _parse_computation(header_args: str, lines: list[str],
             if wm:
                 for d in wm.group(1).split("x"):
                     k *= int(d)
-            rhs = operands.split(",")
             cin = 1
-            if len(rhs) > 1:
-                rname = rhs[1].strip().lstrip("%")
-                rshapes = _shapes_in(symtab.get(rname, ""))
+            if len(operands) > 1:
+                rshapes = _shapes_in(_operand_shape(operands[1], symtab))
                 fm = re.search(r"dim_labels=[^,]*?_([\w?]+?)->", line)
                 if rshapes and fm and "i" in fm.group(1):
                     cin = rshapes[0][1][fm.group(1).index("i")]

@@ -139,3 +139,28 @@ def test_exact_cost_batched_dot():
         jax.ShapeDtypeStruct((4, 64, 16), jnp.float32)).compile()
     ec = exact_cost(c.as_text())
     assert ec.flops == pytest.approx(2 * 4 * 32 * 64 * 16, rel=1e-6)
+
+
+def test_exact_cost_is_hlo_print_version_aware():
+    """Same graph, both operand print styles: older XLA prints bare %name
+    references, newer XLA inlines each operand's shape. The parser must
+    count identical flops for both."""
+    untyped = """\
+ENTRY %main.4 (Arg_0.1: f32[128,64], Arg_1.2: f32[64,32]) -> f32[128,32] {
+  %Arg_0.1 = f32[128,64]{1,0} parameter(0)
+  %Arg_1.2 = f32[64,32]{1,0} parameter(1)
+  ROOT %dot.3 = f32[128,32]{1,0} dot(%Arg_0.1, %Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    typed = """\
+ENTRY %main.4 (Arg_0.1: f32[128,64], Arg_1.2: f32[64,32]) -> f32[128,32] {
+  %Arg_0.1 = f32[128,64]{1,0} parameter(0)
+  %Arg_1.2 = f32[64,32]{1,0} parameter(1)
+  ROOT %dot.3 = f32[128,32]{1,0} dot(f32[128,64]{1,0} %Arg_0.1, f32[64,32]{1,0} %Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    want = 2 * 128 * 32 * 64
+    eu, et = exact_cost(untyped), exact_cost(typed)
+    assert eu.flops == pytest.approx(want, rel=1e-6)
+    assert et.flops == pytest.approx(want, rel=1e-6)
+    assert eu.mem_bytes == et.mem_bytes > 0
