@@ -1,0 +1,157 @@
+"""Benchmark regression gate: compare a fresh ``benchmarks/run.py --json``
+dump against the committed ``benchmarks/baseline.json``.
+
+A row regresses when its ``us_per_call`` exceeds the baseline by more
+than ``--threshold`` (default 30%) AFTER machine-speed calibration: the
+median new/baseline ratio estimates how much faster or slower this
+machine is than the one that wrote the baseline, and each row is judged
+against that calibrated expectation. That keeps the gate meaningful on
+CI runners whose absolute speed differs from the baseline machine while
+still catching the thing that matters — one benchmark slowing down
+relative to the rest.
+
+Calibration and gating use DIFFERENT row sets on purpose: the median is
+anchored by every shared row above a small noise floor
+(``CAL_MIN_US``), while only rows above ``--min-us`` can fail the gate.
+Gated rows therefore cannot mask their own regression by dragging the
+median with them (with few gated rows and self-calibration, a uniform
+slowdown of exactly the gated set would read as "machine speed").
+Calibration also needs at least ``MIN_CAL_ROWS`` anchor rows — below
+that the scale is forced to 1.0 (raw comparison). ``--no-calibrate``
+compares raw ratios always.
+
+Rows faster than ``--min-us`` in the baseline are not gated (pure
+timing noise), and rows only one side has are reported, never fatal —
+adding a benchmark must not break CI until ``--update-baseline``
+records it.
+
+    python -m benchmarks.run --only fig1,table1,campaign_tpu,campaign_cuda \\
+        --json bench.json
+    python -m benchmarks.compare bench.json            # gate (exit 1 on fail)
+    python -m benchmarks.compare bench.json --update-baseline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+from pathlib import Path
+
+DEFAULT_BASELINE = Path(__file__).parent / "baseline.json"
+
+#: Rows above this baseline time anchor the machine-speed median (even
+#: when they are too noisy to gate on).
+CAL_MIN_US = 50.0
+#: Fewer anchor rows than this and calibration is meaningless — compare
+#: raw ratios instead of letting one or two rows set the scale.
+MIN_CAL_ROWS = 3
+
+
+def _rows(dump: dict) -> dict[str, float]:
+    """``{bench/row-name: us_per_call}`` flattened from a --json dump."""
+    out = {}
+    for bench, rows in dump.get("benchmarks", {}).items():
+        for r in rows:
+            out[f"{bench}/{r['name']}"] = float(r["us_per_call"])
+    return out
+
+
+def compare(new: dict, baseline: dict, *, threshold: float = 0.30,
+            min_us: float = 200.0, calibrate: bool = True) -> dict:
+    """Pure comparison -> {scale, regressions, improvements, skipped,
+    only_new, only_baseline}; ``regressions`` non-empty == gate fails."""
+    new_rows, base_rows = _rows(new), _rows(baseline)
+    shared = sorted(set(new_rows) & set(base_rows))
+    anchors = [k for k in shared
+               if base_rows[k] >= CAL_MIN_US and new_rows[k] > 0]
+    timed = [k for k in shared if base_rows[k] >= min_us and new_rows[k] > 0]
+    cal_ratios = [new_rows[k] / base_rows[k] for k in anchors]
+    scale = statistics.median(cal_ratios) \
+        if calibrate and len(cal_ratios) >= MIN_CAL_ROWS else 1.0
+    regressions, improvements = [], []
+    for k in timed:
+        rel = (new_rows[k] / base_rows[k]) / scale
+        entry = {"row": k, "base_us": base_rows[k], "new_us": new_rows[k],
+                 "ratio": new_rows[k] / base_rows[k], "relative": rel}
+        if rel > 1.0 + threshold:
+            regressions.append(entry)
+        elif rel < 1.0 - threshold:
+            improvements.append(entry)
+    timed_set = set(timed)
+    return {
+        "scale": scale,
+        "checked": len(timed),
+        "regressions": regressions,
+        "improvements": improvements,
+        "skipped": [k for k in shared if k not in timed_set],
+        "only_new": sorted(set(new_rows) - set(base_rows)),
+        "only_baseline": sorted(set(base_rows) - set(new_rows)),
+    }
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.compare",
+        description="Gate benchmarks/run.py --json output against the "
+                    "committed baseline (exit 1 on any >threshold "
+                    "per-row regression).")
+    ap.add_argument("new", help="fresh benchmarks/run.py --json output")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    help="committed baseline JSON (default: %(default)s)")
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="allowed relative slowdown per row "
+                         "(default: %(default)s)")
+    ap.add_argument("--min-us", type=float, default=200.0,
+                    help="ignore rows whose baseline is faster than this "
+                         "(timing noise; default: %(default)s)")
+    ap.add_argument("--no-calibrate", action="store_true",
+                    help="skip machine-speed calibration; compare raw "
+                         "us_per_call ratios")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="overwrite the baseline with the new dump and "
+                         "exit 0 (commit the result)")
+    args = ap.parse_args(argv)
+
+    with open(args.new) as f:
+        new = json.load(f)
+    if args.update_baseline:
+        Path(args.baseline).write_text(
+            json.dumps(new, indent=2, sort_keys=True) + "\n")
+        print(f"baseline updated <- {args.new} "
+              f"({len(_rows(new))} rows) -> {args.baseline}")
+        return 0
+    if not Path(args.baseline).exists():
+        print(f"no baseline at {args.baseline}; run with --update-baseline "
+              f"first", file=sys.stderr)
+        return 2
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    res = compare(new, baseline, threshold=args.threshold,
+                  min_us=args.min_us, calibrate=not args.no_calibrate)
+    print(f"machine-speed calibration: x{res['scale']:.2f} "
+          f"(median new/baseline over timed rows)")
+    for k in res["only_new"]:
+        print(f"  new row (no baseline yet): {k}")
+    for k in res["only_baseline"]:
+        print(f"  baseline row missing from this run: {k}")
+    for e in res["improvements"]:
+        print(f"  improved: {e['row']} {e['base_us']:.0f}us -> "
+              f"{e['new_us']:.0f}us ({e['relative']:.2f}x calibrated)")
+    for e in res["regressions"]:
+        print(f"  REGRESSED: {e['row']} {e['base_us']:.0f}us -> "
+              f"{e['new_us']:.0f}us ({e['relative']:.2f}x calibrated, "
+              f"limit {1.0 + args.threshold:.2f}x)")
+    n = len(res["regressions"])
+    if n:
+        print(f"FAIL: {n} row(s) regressed beyond "
+              f"{args.threshold:.0%}", file=sys.stderr)
+        return 1
+    print(f"OK: no regression beyond {args.threshold:.0%} across "
+          f"{res['checked']} timed rows")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -6,7 +6,11 @@ Each benchmark returns rows ``{name, us_per_call, derived}`` where
 ``--json out.json`` additionally dumps the rows as structured JSON so
 campaign/bench results can feed the ``BENCH_*.json`` perf trajectory.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig11] [--json out.json]
+    PYTHONPATH=src python -m benchmarks.run [--only fig11,table3] \\
+        [--json out.json]
+
+CI runs the cheap analytic subset and gates on ``benchmarks/compare.py``
+against the committed ``benchmarks/baseline.json`` (see that module).
 """
 from __future__ import annotations
 
@@ -215,6 +219,33 @@ def bench_tpu_campaign() -> list[dict]:
                     f"resume_evals={rerun.new_evaluations}")}]
 
 
+def bench_cuda_campaign() -> list[dict]:
+    """repro.dse cuda backend: a small (arch x shape x GPU part x count)
+    campaign — wall time, memoized re-run time, and frontier size/spread."""
+    import tempfile
+
+    from repro.dse import run_campaign
+    from repro.dse.backends import get_backend
+
+    be = get_backend("cuda")
+    cells = be.expand_cells(archs=["starcoder2-3b", "xlstm-350m"],
+                            shapes=["train_4k", "decode_32k"],
+                            gpus=[8, 16, 32],
+                            gpu_types=("a100-80g", "h100"),
+                            remats=("full", "none"), microbatches=(1, 2))
+    with tempfile.TemporaryDirectory() as td:
+        store = f"{td}/bench_cuda.jsonl"
+        rep, us = _timed(run_campaign, cells, store, backend="cuda")
+        rerun, us2 = _timed(run_campaign, cells, store, backend="cuda")
+    return [{
+        "name": f"dse_campaign_cuda_{len(cells)}cells", "us_per_call": us,
+        "derived": (f"evals={rep.new_evaluations};"
+                    f"frontier={len(rep.frontier())};"
+                    f"frontier_k4={len(rep.frontier(k=4))};"
+                    f"resume_us={us2:.0f};"
+                    f"resume_evals={rerun.new_evaluations}")}]
+
+
 BENCHES = {
     "fig1": bench_fig1_ctc,
     "table1": bench_table1_variance,
@@ -225,17 +256,27 @@ BENCHES = {
     "table4": bench_table4_batch,
     "campaign": bench_dse_campaign,
     "campaign_tpu": bench_tpu_campaign,
+    "campaign_cuda": bench_cuda_campaign,
     "roofline": bench_roofline,
 }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", choices=list(BENCHES), default=None)
+    ap.add_argument("--only", default=None, metavar="NAMES",
+                    help="comma list of benchmarks to run, from: "
+                         + ",".join(BENCHES))
     ap.add_argument("--json", dest="json_path", default=None, metavar="OUT",
                     help="also write rows (grouped by benchmark) as JSON")
     args = ap.parse_args()
-    names = [args.only] if args.only else list(BENCHES)
+    if args.only:
+        names = [n.strip() for n in args.only.split(",") if n.strip()]
+        unknown = [n for n in names if n not in BENCHES]
+        if unknown:
+            ap.error(f"unknown benchmarks {unknown}; "
+                     f"choose from {list(BENCHES)}")
+    else:
+        names = list(BENCHES)
     results: dict[str, list[dict]] = {}
     print("name,us_per_call,derived")
     for n in names:

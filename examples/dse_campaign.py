@@ -7,12 +7,16 @@ campaign engine adds over the single-pair ``explore()``:
 1. ranked results under a custom scalarization (throughput + efficiency),
 2. the 5-objective Pareto frontier across all designs,
 3. free re-runs — the second campaign reuses the store, zero PSO evals,
-4. the same engine pointed at a different device family (`tpu` backend),
-   and a Markdown report rendered from the combined store.
+4. the same engine pointed at two more device families (`tpu` and `cuda`
+   backends) into the SAME store,
+5. a cross-backend comparison: every record normalized to (TFLOP/s, per
+   watt, per dollar, per peak) so one frontier ranks all three families,
+   and a Markdown report (with cross-backend section) from the mix.
 
     PYTHONPATH=src python examples/dse_campaign.py
 """
-from repro.dse import Objectives, render_report, run_campaign
+from repro.dse import (NORMALIZED_OBJECTIVES, Objectives, canonical_vector,
+                       diverse_front, render_report, run_campaign)
 from repro.dse.backends import get_backend
 from repro.dse.campaign import expand_cells
 from repro.dse.store import ResultStore
@@ -57,12 +61,42 @@ def main():
         print(f"  {rec['cell_key']}: step {o['step_time_s']:.3g}s, "
               f"mfu {o['mfu']:.2f}, {o['hbm_gib']:.1f} GiB/chip")
 
+    # Third family: CUDA GPUs over the SM/HBM/NVLink roofline, with the
+    # GPU part itself as a campaign axis (A100-80G vs H100).
+    cuda = get_backend("cuda")
+    cuda_cells = cuda.expand_cells(archs=["starcoder2-3b", "xlstm-350m"],
+                                   shapes=["train_4k", "decode_32k"],
+                                   gpus=[8, 16, 32],
+                                   gpu_types=("a100-80g", "h100"))
+    cuda_report = run_campaign(cuda_cells, store, backend="cuda")
+    print(f"\n== cuda campaign: {len(cuda_cells)} cells, frontier of "
+          f"{len(cuda_report.frontier())}; 4 most-spread designs: ==")
+    for rec in cuda_report.frontier(k=4):
+        o = rec["objectives"]
+        print(f"  {rec['cell_key']}: step {o['step_time_s']:.3g}s, "
+              f"mfu {o['mfu']:.2f}, {int(o['watts'])} W")
+
+    # Cross-backend frontier: every record normalized to the shared
+    # (tflops, /W, /$, /peak) schema, one dominance sort over all of it.
+    records = ResultStore(store).records()
+    norm = [(r, get_backend(r.get("backend", "fpga")).normalized(r))
+            for r in records]
+    norm = [(r, n) for r, n in norm if n["feasible"]]
+    vecs = [canonical_vector(n, NORMALIZED_OBJECTIVES) for _, n in norm]
+    print("\n== cross-backend frontier (normalized, most-spread first) ==")
+    for i in diverse_front(vecs)[:6]:
+        r, n = norm[i]
+        print(f"  [{r.get('backend', 'fpga')}] {r['cell_key']}: "
+              f"{n['tflops']:.1f} TFLOP/s, {n['tflops_per_watt']:.3f}/W, "
+              f"{n['tflops_per_dollar']:.1f}/$, {n['tflops_per_peak']:.2f} "
+              f"of peak")
+
     out = "results/dse_quickstart_report.md"
-    md = render_report(ResultStore(store).records(),
-                       title="dse_campaign.py example")
+    md = render_report(records, title="dse_campaign.py example")
     with open(out, "w") as f:
         f.write(md)
-    print(f"\nreport -> {out} ({len(md)} chars)")
+    print(f"\nreport -> {out} ({len(md)} chars, incl. cross-backend "
+          f"frontier section)")
     print("OK")
 
 

@@ -17,7 +17,6 @@ topology) transparently — elastic rescaling after node loss.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import shutil

@@ -3,7 +3,8 @@ two-level DSE engine (the paper's primary contribution), plus the TPU
 retarget used by the JAX runtime."""
 from .explorer import ExplorationResult, explore
 from .generic_model import GenericDesign, best_generic
-from .hw_specs import FPGAS, KU115, TPU_V5E, TPUS, VU9P, ZC706, ZCU102, FPGASpec, TPUSpec
+from .hw_specs import (A100_40G, A100_80G, FPGAS, GPUS, H100, KU115, TPU_V5E,
+                       TPUS, VU9P, ZC706, ZCU102, FPGASpec, GPUSpec, TPUSpec)
 from .local_opt import (RAV, DesignPoint, dnnbuilder_design, evaluate_rav,
                         generic_only_design)
 from .netinfo import INPUT_CASES, TABLE1_NETS, LayerInfo, NetInfo, vgg16
@@ -12,8 +13,9 @@ from .pso import PSOConfig, PSOResult, optimize
 
 __all__ = [
     "ExplorationResult", "explore", "GenericDesign", "best_generic",
-    "FPGAS", "KU115", "TPU_V5E", "TPUS", "VU9P", "ZC706", "ZCU102",
-    "FPGASpec", "TPUSpec", "RAV", "DesignPoint", "dnnbuilder_design",
+    "A100_40G", "A100_80G", "FPGAS", "GPUS", "H100", "KU115", "TPU_V5E",
+    "TPUS", "VU9P", "ZC706", "ZCU102", "FPGASpec", "GPUSpec", "TPUSpec",
+    "RAV", "DesignPoint", "dnnbuilder_design",
     "evaluate_rav", "generic_only_design", "INPUT_CASES", "TABLE1_NETS",
     "LayerInfo", "NetInfo", "vgg16", "PipelineDesign", "StageDesign",
     "design_pipeline", "PSOConfig", "PSOResult", "optimize",

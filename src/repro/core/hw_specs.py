@@ -1,10 +1,20 @@
-"""Hardware descriptions for the two targets DNNExplorer runs against.
+"""Hardware descriptions for the three device families DNNExplorer's DSE
+runs against.
 
 * ``FPGASpec`` — the paper's own domain (Xilinx parts; resource units match
   the paper: DSP48 slices, 18-Kb BRAM blocks, external-memory GB/s).
 * ``TPUSpec`` — the retarget domain for the JAX runtime (per-chip peak
   FLOP/s, HBM capacity/bandwidth, ICI link bandwidth), used by
   ``core/tpu_planner.py`` and the roofline analysis.
+* ``GPUSpec`` — the CUDA retarget domain (per-GPU SM peak FLOP/s, HBM
+  capacity/bandwidth, NVLink/InfiniBand interconnect), used by
+  ``core/gpu_model.py`` / ``core/gpu_planner.py``.
+
+Every family also carries a TDP and an hourly dollar proxy (cloud
+on-demand list prices, board-power estimates for the FPGAs) so the
+``repro.dse`` normalized objectives (throughput per watt / per dollar /
+per peak TFLOP) can compare designs ACROSS families; the proxies are
+deliberately coarse — they normalize frontiers, they don't bill anyone.
 """
 from __future__ import annotations
 
@@ -25,6 +35,9 @@ class FPGASpec:
     # Place-and-route headroom: the paper's best designs use <=85% of DSPs
     # (Table 3 peaks at 4686 of 5520) — routing congestion caps utilization.
     usable_frac: float = 0.85
+    # Board power and hourly dollar proxy for the normalized objectives.
+    tdp_watts: float = 75.0
+    usd_per_hour: float = 1.0
 
     @property
     def freq(self) -> float:
@@ -49,11 +62,17 @@ class FPGASpec:
 
 # Specs from Xilinx datasheets; BW = one effective DDR4-2400 channel per
 # accelerator (calibrated so the batch=1 small-input cases of Table 3 are
-# bandwidth-bound at the paper's measured throughput).
-KU115 = FPGASpec("ku115", dsp=5520, bram18k=4320, bw_gbps=19.2)
-ZC706 = FPGASpec("zc706", dsp=900, bram18k=1090, bw_gbps=12.8)    # DDR3-1600
-VU9P = FPGASpec("vu9p", dsp=6840, bram18k=4320, bw_gbps=38.4)     # 2 channels
-ZCU102 = FPGASpec("zcu102", dsp=2520, bram18k=1824, bw_gbps=19.2)
+# bandwidth-bound at the paper's measured throughput). Power = typical
+# board TDP; dollars = cloud FPGA proxy (VU9P anchors at the AWS F1 rate,
+# the others scale by fabric size).
+KU115 = FPGASpec("ku115", dsp=5520, bram18k=4320, bw_gbps=19.2,
+                 tdp_watts=75.0, usd_per_hour=1.35)
+ZC706 = FPGASpec("zc706", dsp=900, bram18k=1090, bw_gbps=12.8,    # DDR3-1600
+                 tdp_watts=20.0, usd_per_hour=0.35)
+VU9P = FPGASpec("vu9p", dsp=6840, bram18k=4320, bw_gbps=38.4,     # 2 channels
+                tdp_watts=85.0, usd_per_hour=1.65)
+ZCU102 = FPGASpec("zcu102", dsp=2520, bram18k=1824, bw_gbps=19.2,
+                  tdp_watts=40.0, usd_per_hour=0.60)
 
 FPGAS = {f.name: f for f in (KU115, ZC706, VU9P, ZCU102)}
 
@@ -80,6 +99,9 @@ class TPUSpec:
     vmem_bytes: float = 128 * 2 ** 20
     # 2D torus: each chip has links on both mesh axes.
     links_per_chip: int = 4
+    # Chip power and hourly dollar proxy for the normalized objectives.
+    tdp_watts: float = 200.0
+    usd_per_hour: float = 1.20
 
 
 TPU_V5E = TPUSpec(
@@ -91,3 +113,44 @@ TPU_V5E = TPUSpec(
 )
 
 TPUS = {TPU_V5E.name: TPU_V5E}
+
+
+# ---------------------------------------------------------------------------
+# GPU (CUDA retarget domain)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GPUSpec:
+    """One NVIDIA datacenter part, as the analytic roofline in
+    ``core/gpu_model.py`` sees it: SM compute peak, HBM capacity and
+    bandwidth, and a two-tier interconnect — NVLink within a node of
+    ``node_size`` GPUs, InfiniBand per GPU across nodes."""
+
+    name: str
+    peak_flops: float       # per-GPU, bf16 tensor-core dense
+    hbm_bytes: float        # per-GPU capacity
+    hbm_bw: float           # per-GPU, bytes/s
+    nvlink_bw: float        # per-GPU NVLink bandwidth (one direction), bytes/s
+    ib_bw: float            # per-GPU inter-node bandwidth, bytes/s
+    sm_count: int
+    tdp_watts: float
+    usd_per_hour: float     # cloud on-demand proxy, $/GPU-hr
+    node_size: int = 8      # GPUs sharing an NVLink/NVSwitch domain
+
+
+# Datasheet peaks (bf16 dense, no sparsity); NVLink = per-direction
+# aggregate (NVLink3: 600 GB/s bidir -> 300; NVLink4: 900 -> 450); IB = one
+# NIC per GPU (DGX A100: 200 Gb/s; DGX H100: 400 Gb/s). Dollars = typical
+# cloud on-demand per-GPU rates.
+A100_40G = GPUSpec("a100-40g", peak_flops=312e12, hbm_bytes=40 * 2 ** 30,
+                   hbm_bw=1555e9, nvlink_bw=300e9, ib_bw=25e9, sm_count=108,
+                   tdp_watts=400.0, usd_per_hour=3.05)
+A100_80G = GPUSpec("a100-80g", peak_flops=312e12, hbm_bytes=80 * 2 ** 30,
+                   hbm_bw=2039e9, nvlink_bw=300e9, ib_bw=25e9, sm_count=108,
+                   tdp_watts=400.0, usd_per_hour=3.67)
+H100 = GPUSpec("h100", peak_flops=989e12, hbm_bytes=80 * 2 ** 30,
+               hbm_bw=3350e9, nvlink_bw=450e9, ib_bw=50e9, sm_count=132,
+               tdp_watts=700.0, usd_per_hour=6.98)
+
+GPUS = {g.name: g for g in (A100_40G, A100_80G, H100)}

@@ -15,8 +15,7 @@ Conventions
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Callable, Iterable
+from typing import Callable
 
 # ---------------------------------------------------------------------------
 # Layer description

@@ -89,6 +89,17 @@ def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
     return b * per_tok
 
 
+def useful_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """MODEL FLOPs per step that do useful work: the standard MFU
+    numerator. Train excludes the full-remat recompute pass —
+    :func:`model_flops` counts fwd + recompute + 2x bwd (8ND-style), of
+    which 6ND is model work — so a compute-bound full-remat design reports
+    MFU 0.75, not a fictitious 1.0, and the DSE's normalized delivered
+    TFLOP/s never exceeds what the hardware could usefully deliver."""
+    f = model_flops(cfg, shape)
+    return 0.75 * f if shape.kind == "train" else f
+
+
 def kv_cache_bytes(cfg: ArchConfig, shape: ShapeSpec) -> float:
     """Global decode-state bytes (KV cache or recurrent state)."""
     b, s = shape.global_batch, shape.seq_len

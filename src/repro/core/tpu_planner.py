@@ -21,7 +21,7 @@ import math
 from repro.configs.base import ArchConfig, ShapeSpec
 from .hw_specs import TPU_V5E, TPUSpec
 from .tpu_model import (MeshDesc, Roofline, analytic_roofline,
-                        kv_cache_bytes, model_flops)
+                        kv_cache_bytes, useful_flops)
 
 
 @dataclasses.dataclass
@@ -100,7 +100,9 @@ def evaluate_point(cfg: ArchConfig, shape: ShapeSpec, chips: int, dp: int,
     hbm = hbm_per_chip(cfg, shape, mesh, remat, microbatches)
     fits = hbm <= hw.hbm_bytes * 0.9
     step = rl.step_time
-    useful = model_flops(cfg, shape) / chips / hw.peak_flops
+    # MFU numerator excludes recompute FLOPs (see tpu_model.useful_flops):
+    # full-remat compute-bound designs top out at 0.75, not 1.0.
+    useful = useful_flops(cfg, shape) / chips / hw.peak_flops
     mfu = min(useful / step, 1.0) if step else 0.0
     return Plan(cfg.name, shape.name, chips, dp, tp, microbatches, remat,
                 rl, hbm, fits, step, mfu)

@@ -12,7 +12,10 @@ combinations of DNN workloads and targeted FPGAs", Tables 3/4, Figs. 9-11)
    The ``fpga`` backend (default) sweeps (network x input size x FPGA x
    precision x batch cap) with one PSO search per cell; the ``tpu``
    backend sweeps (arch x shape x chip count x remat x microbatches)
-   through the analytic planner in :mod:`repro.core.tpu_planner`.
+   through the analytic planner in :mod:`repro.core.tpu_planner`; the
+   ``cuda`` backend adds a GPU-part axis (A100-40G/A100-80G/H100) over
+   the GPU roofline in :mod:`repro.core.gpu_model` /
+   :mod:`repro.core.gpu_planner`.
 2. *Campaign running* — :mod:`repro.dse.campaign` fans a backend's cells
    out over a process pool with deterministic per-cell seeds, collecting
    records into a resumable JSONL store as they finish.
@@ -20,7 +23,11 @@ combinations of DNN workloads and targeted FPGAs", Tables 3/4, Figs. 9-11)
    schema machinery (canonical maximization form, weighted
    scalarization); each backend declares its own vector (FPGA:
    throughput img/s, GOP/s, latency, DSP efficiency, BRAM; TPU: step
-   time, MFU, HBM per chip, chips used).
+   time, MFU, HBM per chip, chips used; CUDA: the TPU vector plus board
+   watts) — plus the NORMALIZED cross-backend schema (delivered TFLOP/s,
+   per watt, per dollar-proxy, per peak TFLOP) every backend can emit
+   via ``Backend.normalized(record)``, so one frontier compares device
+   families.
 4. *Frontier extraction* — :mod:`repro.dse.pareto` non-dominated-sorts
    the campaign's designs into Pareto fronts and, NSGA-II-style, orders
    them by crowding distance so a truncated frontier is a SPREAD across
@@ -32,7 +39,11 @@ combinations of DNN workloads and targeted FPGAs", Tables 3/4, Figs. 9-11)
    free across runs. FPGA records are byte-compatible with PR-1 stores.
 6. *Reporting* — :mod:`repro.dse.report` renders any store (plus optional
    ``benchmarks/run.py --json`` output) into a Markdown campaign report:
-   frontier tables, per-workload winners, objective trade-off summaries.
+   frontier tables, per-workload winners, objective trade-off summaries,
+   and — for stores mixing device families — a cross-backend normalized
+   frontier. ``--compare A B [C ...]`` renders the trajectory between
+   stores: per-workload winner deltas, best-objective trajectories, and
+   a pooled cross-backend frontier.
 
 Quickstart (see also ``examples/dse_campaign.py`` and ``README.md``)::
 
@@ -44,15 +55,26 @@ Quickstart (see also ``examples/dse_campaign.py`` and ``README.md``)::
     python -m repro.dse.campaign --backend tpu --archs starcoder2-3b,xlstm-350m \\
         --shapes train_4k,decode_32k --chips 8,16,32 --store results/dse_tpu.jsonl
 
-    # Markdown report (frontier tables, per-workload winners, trade-offs):
+    # CUDA campaign (GPU roofline; the GPU part is a campaign axis):
+    python -m repro.dse.campaign --backend cuda --archs starcoder2-3b \\
+        --shapes train_4k,decode_32k --gpus 8,16,32 \\
+        --gpu-types a100-80g,h100 --store results/dse_cuda.jsonl
+
+    # Markdown report (frontier tables, per-workload winners, trade-offs;
+    # mixed stores also get a cross-backend normalized frontier):
     python -m repro.dse.report results/dse.jsonl --out docs/reports/fpga.md
-    python -m repro.dse.report results/dse_tpu.jsonl --out docs/reports/tpu.md
+
+    # Compare stores: winner deltas + objective trajectories:
+    python -m repro.dse.report --compare results/dse_tpu.jsonl \\
+        results/dse_cuda.jsonl --out docs/reports/tpu_vs_cuda.md
 """
-from .objectives import (OBJECTIVES, ObjectiveSpec, Objectives,
-                         canonical_vector, scalarize_values,
-                         scalarized_objective)
-from .pareto import (crowding_distance, dominates, non_dominated,
-                     nondominated_sort, pareto_front, select_diverse)
+from .objectives import (NORMALIZED_DEFAULT_WEIGHTS, NORMALIZED_OBJECTIVES,
+                         OBJECTIVES, ObjectiveSpec, Objectives,
+                         canonical_vector, normalized_throughput,
+                         scalarize_values, scalarized_objective)
+from .pareto import (crowding_distance, diverse_front, dominates,
+                     non_dominated, nondominated_sort, pareto_front,
+                     select_diverse)
 from .store import ResultStore, rav_hash
 
 # Campaign/backend/report exports resolve lazily (PEP 562) so
@@ -60,16 +82,19 @@ from .store import ResultStore, rav_hash
 # import their module twice (runpy's found-in-sys.modules warning).
 _CAMPAIGN_EXPORTS = ("CampaignCell", "CampaignReport", "cell_seed",
                      "expand_cells", "run_campaign", "run_cell")
-_BACKEND_EXPORTS = ("BACKENDS", "Backend", "FPGABackend", "TPUBackend",
+_BACKEND_EXPORTS = ("BACKENDS", "Backend", "CUDABackend", "CUDACell",
+                    "FPGABackend", "GPU_OBJECTIVES", "TPUBackend",
                     "TPUCell", "TPU_OBJECTIVES", "get_backend")
-_REPORT_EXPORTS = ("fixture_records", "render_report")
+_REPORT_EXPORTS = ("fixture_records", "render_compare", "render_report")
 
 __all__ = [
     *_CAMPAIGN_EXPORTS, *_BACKEND_EXPORTS, *_REPORT_EXPORTS,
+    "NORMALIZED_DEFAULT_WEIGHTS", "NORMALIZED_OBJECTIVES",
     "OBJECTIVES", "ObjectiveSpec", "Objectives", "canonical_vector",
-    "scalarize_values", "scalarized_objective", "crowding_distance",
-    "dominates", "non_dominated", "nondominated_sort", "pareto_front",
-    "select_diverse", "ResultStore", "rav_hash",
+    "normalized_throughput", "scalarize_values", "scalarized_objective",
+    "crowding_distance", "diverse_front", "dominates", "non_dominated",
+    "nondominated_sort", "pareto_front", "select_diverse", "ResultStore",
+    "rav_hash",
 ]
 
 

@@ -17,7 +17,7 @@ family:
   store never silently serves results found under different settings;
 * presentation/CLI hooks (table rows, progress headlines, axis flags).
 
-Two backends ship:
+Three backends ship:
 
 ``fpga``
     The paper's flow, byte-compatible with PR-1 stores: cells are
@@ -32,21 +32,40 @@ Two backends ship:
     :func:`repro.core.tpu_planner.evaluate_point` and keeping the best
     mapping under the cell's scalarization. Objectives: step time, MFU,
     per-chip HBM (with the HBM-fit feasibility gate), chips used.
+
+``cuda``
+    The same retarget over the GPU roofline
+    (:mod:`repro.core.gpu_model` / :mod:`repro.core.gpu_planner`): cells
+    add a GPU-part axis (a100-40g / a100-80g / h100) on top of the TPU
+    backend's workload axes, and the (dp, tp) search inside each cell is
+    identical in shape. Objectives mirror the TPU vector plus board
+    watts (GPU parts differ in TDP at the same count, so power is a real
+    trade-off axis within the family).
+
+Every backend can additionally express any of its records in the
+*normalized* cross-backend schema
+(:data:`repro.dse.objectives.NORMALIZED_OBJECTIVES` — delivered TFLOP/s,
+per watt, per dollar-proxy, per peak TFLOP) via :meth:`Backend.normalized`
+— computed from stored objectives at read time, so pre-existing stores
+compare across device families without re-running anything.
 """
 from __future__ import annotations
 
 import abc
+import argparse
 import dataclasses
 import time
 from typing import Mapping, Sequence
 
 from repro.configs import ARCH_IDS, SHAPES, cell_enabled, get_config
-from repro.core.hw_specs import FPGAS
+from repro.core import gpu_planner
+from repro.core.hw_specs import FPGAS, GPUS, TPU_V5E, alpha_for
 from repro.core.netinfo import TABLE1_NETS
 from repro.core.tpu_planner import evaluate_point, factorizations
 
 from .objectives import (DEFAULT_WEIGHTS, OBJECTIVES, ObjectiveSpec,
-                         canonical_vector, scalarize_values)
+                         canonical_vector, normalized_throughput,
+                         scalarize_values)
 from .store import SCHEMA_VERSION
 
 
@@ -64,18 +83,31 @@ def parse_inputs(text: str) -> list[tuple[int, int]]:
     out = []
     for tok in _csv(text):
         h, _, w = tok.partition("x")
-        out.append((int(h), int(w or h)))
+        try:
+            out.append((int(h), int(w or h)))
+        except ValueError:
+            raise ValueError(
+                f"bad input size {tok!r}; expected H or HxW "
+                f"(e.g. 224 or 320x480)") from None
     return out
 
 
 def parse_weights(text: str) -> dict[str, float] | None:
-    """``"throughput_ips=1,dsp_eff=500"`` -> weight dict (None if empty)."""
+    """``"throughput_ips=1,dsp_eff=500"`` -> weight dict (None if empty).
+    A bare ``name`` or ``name=`` means weight 1.0."""
     if not text:
         return None
     out = {}
     for tok in _csv(text):
-        name, _, val = tok.partition("=")
-        out[name] = float(val) if val else 1.0
+        name, _, val = (part.strip() for part in tok.partition("="))
+        if not name:
+            raise ValueError(f"bad weight token {tok!r}; "
+                             f"expected name=value")
+        try:
+            out[name] = float(val) if val else 1.0
+        except ValueError:
+            raise ValueError(f"bad weight value in {tok!r}; "
+                             f"expected a number after '='") from None
     return out
 
 
@@ -106,6 +138,14 @@ class Backend(abc.ABC):
         """Weighted canonical sum; infeasible records score 0.0."""
         return scalarize_values(objectives, self.objectives, weights,
                                 self.default_weights)
+
+    @abc.abstractmethod
+    def normalized(self, rec: Mapping) -> dict:
+        """A store record's objectives re-expressed in the cross-backend
+        :data:`~repro.dse.objectives.NORMALIZED_OBJECTIVES` schema
+        (delivered TFLOP/s, per watt, per dollar-proxy, per peak TFLOP).
+        Computed from the STORED objectives + the hardware tables, not
+        re-evaluated — legacy stores normalize without re-running."""
 
     # -- campaign contract ---------------------------------------------------
 
@@ -188,6 +228,17 @@ class FPGABackend(Backend):
         from .campaign import _search_config
         return _search_config(base_seed, population, iterations, weights)
 
+    def normalized(self, rec: Mapping) -> dict:
+        """GOP/s -> TFLOP/s against the board's power/price and the
+        precision-dependent DSP peak (Eq. 1) — ``tflops_per_peak`` is
+        exactly the paper's DSP efficiency."""
+        hw = FPGAS[rec["cell"]["fpga"]]
+        o = rec["objectives"]
+        peak_tflops = hw.peak_gops(alpha_for(rec["cell"]["precision"])) / 1e3
+        return normalized_throughput(o["gops"] / 1e3, hw.tdp_watts,
+                                     hw.usd_per_hour, peak_tflops,
+                                     feasible=o.get("feasible", True))
+
     def headline(self, rec: dict) -> str:
         return f"{rec['objectives']['gops']:.1f} GOP/s"
 
@@ -230,6 +281,33 @@ class FPGABackend(Backend):
             fpgas=_csv(args.fpgas),
             precisions=[int(p) for p in _csv(args.precisions)],
             batch_caps=[int(b) for b in _csv(args.batch_caps)])
+
+
+# ---------------------------------------------------------------------------
+# shared workload axes (tpu + cuda both sweep arch x shape x remat x mb)
+# ---------------------------------------------------------------------------
+
+
+def _add_once(group, *args, **kw) -> None:
+    try:
+        group.add_argument(*args, **kw)
+    except argparse.ArgumentError:
+        pass  # a sibling backend already registered this flag
+
+
+def add_workload_arguments(ap) -> None:
+    """Register the workload axes the TPU and CUDA backends share
+    (``--archs/--shapes/--remats/--microbatches``). One CLI registers
+    every backend's flags, so double registration must be a no-op."""
+    g = ap.add_argument_group("workload axes (tpu & cuda backends)")
+    _add_once(g, "--archs", default="starcoder2-3b",
+              help="comma list from: " + ",".join(ARCH_IDS))
+    _add_once(g, "--shapes", default="train_4k,decode_32k",
+              help="comma list from: " + ",".join(SHAPES))
+    _add_once(g, "--remats", default="full,dots,none",
+              help="comma list of remat policies (train shapes)")
+    _add_once(g, "--microbatches", default="1,2,4",
+              help="comma list of microbatch counts (train shapes)")
 
 
 # ---------------------------------------------------------------------------
@@ -383,6 +461,19 @@ class TPUBackend(Backend):
         return {"weights": {k: float(v) for k, v in weights.items()}
                 if weights else None}
 
+    def normalized(self, rec: Mapping) -> dict:
+        """Delivered TFLOP/s from the stored MFU (useful FLOPs / step over
+        the pod) against the pod's power/price/peak —
+        ``tflops_per_peak`` is exactly the stored MFU."""
+        o = rec["objectives"]
+        hw = TPU_V5E
+        chips = float(o["chips"])
+        peak_tflops = chips * hw.peak_flops / 1e12
+        return normalized_throughput(o["mfu"] * peak_tflops,
+                                     chips * hw.tdp_watts,
+                                     chips * hw.usd_per_hour, peak_tflops,
+                                     feasible=o.get("feasible", True))
+
     def headline(self, rec: dict) -> str:
         o = rec["objectives"]
         return (f"step={o['step_time_s']:.3g}s mfu={o['mfu']:.2f} "
@@ -403,17 +494,10 @@ class TPUBackend(Backend):
                 f"{o['hbm_gib']:>8.2f} {int(o['chips']):>6} {p['bound']:<10}")
 
     def add_axis_arguments(self, ap) -> None:
+        add_workload_arguments(ap)
         g = ap.add_argument_group("tpu campaign axes")
-        g.add_argument("--archs", default="starcoder2-3b",
-                       help="comma list from: " + ",".join(ARCH_IDS))
-        g.add_argument("--shapes", default="train_4k,decode_32k",
-                       help="comma list from: " + ",".join(SHAPES))
         g.add_argument("--chips", default="8,16,32",
                        help="comma list of chip counts (powers of two)")
-        g.add_argument("--remats", default="full,dots,none",
-                       help="comma list of remat policies (train shapes)")
-        g.add_argument("--microbatches", default="1,2,4",
-                       help="comma list of microbatch counts (train shapes)")
 
     def cells_from_args(self, args) -> list[TPUCell]:
         return self.expand_cells(
@@ -424,11 +508,222 @@ class TPUBackend(Backend):
 
 
 # ---------------------------------------------------------------------------
+# cuda — the GPU roofline retarget over repro.core.gpu_planner
+# ---------------------------------------------------------------------------
+
+#: CUDA campaign objective vector, in report order. Mirrors the TPU
+#: vector, plus board watts: the GPU-part axis makes power a real
+#: trade-off WITHIN the family (an H100 pod beats an A100 pod on step
+#: time at the same count but burns 1.75x the board power).
+GPU_OBJECTIVES: tuple[ObjectiveSpec, ...] = (
+    ObjectiveSpec("step_time_s", False, "s"),
+    ObjectiveSpec("mfu", True, "frac"),
+    ObjectiveSpec("hbm_gib", False, "GiB"),
+    ObjectiveSpec("gpus", False, "gpus"),
+    ObjectiveSpec("watts", False, "W"),
+)
+
+#: Latency-first by default, same as the TPU backend.
+GPU_DEFAULT_WEIGHTS: Mapping[str, float] = {"step_time_s": 1.0}
+
+
+@dataclasses.dataclass(frozen=True)
+class CUDACell:
+    """One point of the CUDA campaign grid: a (workload, GPU part,
+    GPU-count budget) triple. As on the TPU side, the dp x tp
+    factorization of ``gpus`` is searched INSIDE the cell."""
+
+    arch: str
+    shape: str
+    gpu: str             # GPUSpec name (a100-40g, a100-80g, h100)
+    gpus: int
+    remat: str
+    microbatches: int
+
+    @property
+    def key(self) -> str:
+        return (f"arch={self.arch}|shape={self.shape}|gpu={self.gpu}"
+                f"|gpus={self.gpus}|remat={self.remat}"
+                f"|mb={self.microbatches}")
+
+
+class CUDABackend(Backend):
+    """Sweep (arch x shape x GPU part x GPU count x remat x microbatches)
+    through the analytic GPU roofline; per cell, keep the best (dp, tp)
+    mapping under the cell's scalarization (feasible mappings first)."""
+
+    name = "cuda"
+    objectives = GPU_OBJECTIVES
+    default_weights = GPU_DEFAULT_WEIGHTS
+    default_store = "results/dse_campaign_cuda.jsonl"
+
+    def expand_cells(self, *, archs: Sequence[str], shapes: Sequence[str],
+                     gpus: Sequence[int],
+                     gpu_types: Sequence[str] = ("a100-80g",),
+                     remats: Sequence[str] = ("full", "dots", "none"),
+                     microbatches: Sequence[int] = (1, 2, 4),
+                     ) -> list[CUDACell]:
+        """The CUDA campaign grid: the TPU backend's workload axes crossed
+        with the GPU-part axis. Inference shapes collapse (remat, mb) to
+        ``(none, 1)``; spec-disabled (arch, shape) combos are skipped."""
+        for s in shapes:
+            if s not in SHAPES:
+                raise KeyError(f"unknown shape {s!r}; known: {sorted(SHAPES)}")
+        for g in gpu_types:
+            if g not in GPUS:
+                raise KeyError(f"unknown gpu {g!r}; known: {sorted(GPUS)}")
+        for n in gpus:
+            if n <= 0 or n & (n - 1):
+                raise ValueError(f"gpus must be a positive power of two "
+                                 f"(got {n}); the planner factorizes the "
+                                 f"mesh into power-of-two dp x tp ways")
+        for r in remats:
+            if r not in ("full", "dots", "none"):
+                raise ValueError(f"unknown remat policy {r!r}; "
+                                 f"choose from full, dots, none")
+        cells, seen = [], set()
+        for arch in archs:
+            cfg = get_config(arch)  # raises KeyError on unknown arch
+            for shape_name in shapes:
+                shape = SHAPES[shape_name]
+                enabled, _why = cell_enabled(cfg, shape)
+                if not enabled:
+                    continue
+                train = shape.kind == "train"
+                for gpu in gpu_types:
+                    for n in gpus:
+                        for remat in (remats if train else ("none",)):
+                            for mb in (microbatches if train else (1,)):
+                                cell = CUDACell(arch, shape_name, gpu, n,
+                                                remat, mb)
+                                if cell.key not in seen:
+                                    seen.add(cell.key)
+                                    cells.append(cell)
+        return cells
+
+    def run_cell(self, cell: CUDACell, *, base_seed=0, population=20,
+                 iterations=30, weights=None) -> dict:
+        """Enumerate the (dp, tp) factorizations of the cell's GPU count
+        on the cell's part; keep the best mapping: feasible first, then
+        highest scalarized objective (ties to the smaller tp)."""
+        t0 = time.perf_counter()
+        cfg = get_config(cell.arch)
+        shape = SHAPES[cell.shape]
+        hw = GPUS[cell.gpu]
+        best, best_rank, evaluated = None, None, 0
+        for dp, tp in factorizations(cell.gpus):
+            if shape.global_batch % dp:
+                continue
+            plan = gpu_planner.evaluate_point(cfg, shape, cell.gpus, dp, tp,
+                                              cell.remat, cell.microbatches,
+                                              hw)
+            evaluated += 1
+            obj = self._plan_objectives(cell, plan, hw)
+            # rank ignoring the feasibility gate (an all-infeasible cell
+            # still reports its least-bad mapping), feasible plans first
+            raw = scalarize_values({**obj, "feasible": True},
+                                   self.objectives, weights,
+                                   self.default_weights)
+            rank = (plan.fits, raw)
+            if best_rank is None or rank > best_rank:
+                best, best_rank = (plan, obj), rank
+        if best is None:
+            raise ValueError(f"no valid dp x tp factorization for {cell.key} "
+                             f"(global_batch={shape.global_batch})")
+        plan, obj = best
+        return {
+            "schema": SCHEMA_VERSION,
+            "backend": self.name,
+            "cell_key": cell.key,
+            "cell": dataclasses.asdict(cell),
+            "arch_name": cfg.name,
+            "search": self.search_config(base_seed=base_seed,
+                                         population=population,
+                                         iterations=iterations,
+                                         weights=weights),
+            "plan": {"dp": plan.dp, "tp": plan.tp,
+                     "bound": plan.roofline.bound},
+            "objectives": obj,
+            "fitness": self.scalarize(obj, weights),
+            "evaluations": evaluated,
+            "search_time_s": round(time.perf_counter() - t0, 4),
+            "weights": dict(weights) if weights else None,
+        }
+
+    @staticmethod
+    def _plan_objectives(cell: CUDACell, plan, hw) -> dict:
+        return {
+            "step_time_s": plan.predicted_step_s,
+            "mfu": plan.mfu,
+            "hbm_gib": plan.hbm_per_gpu / 2**30,
+            "gpus": float(cell.gpus),
+            "watts": cell.gpus * hw.tdp_watts,
+            "feasible": bool(plan.fits),
+        }
+
+    def search_config(self, *, base_seed, population, iterations,
+                      weights) -> dict:
+        """Deterministic exhaustive enumeration, like the TPU backend:
+        only the scalarization (which picks the per-cell mapping)
+        invalidates stored cells."""
+        return {"weights": {k: float(v) for k, v in weights.items()}
+                if weights else None}
+
+    def normalized(self, rec: Mapping) -> dict:
+        """Delivered TFLOP/s from the stored MFU against the pod's
+        power/price/peak for the cell's GPU part."""
+        o = rec["objectives"]
+        hw = GPUS[rec["cell"]["gpu"]]
+        n = float(o["gpus"])
+        peak_tflops = n * hw.peak_flops / 1e12
+        return normalized_throughput(o["mfu"] * peak_tflops, o["watts"],
+                                     n * hw.usd_per_hour, peak_tflops,
+                                     feasible=o.get("feasible", True))
+
+    def headline(self, rec: dict) -> str:
+        o = rec["objectives"]
+        return (f"step={o['step_time_s']:.3g}s mfu={o['mfu']:.2f} "
+                f"hbm={o['hbm_gib']:.1f}GiB {int(o['watts'])}W")
+
+    def group_key(self, rec: dict) -> str:
+        c = rec["cell"]
+        return f"{c['arch']}/{c['shape']}"
+
+    def table_header(self) -> str:
+        return (f"{'cell':<64} {'dpxtp':<8} {'step_s':>10} {'mfu':>6} "
+                f"{'hbm_gib':>8} {'gpus':>5} {'watts':>7} {'bound':<10}")
+
+    def table_row(self, rec: dict) -> str:
+        o, p = rec["objectives"], rec["plan"]
+        return (f"{rec['cell_key']:<64} {p['dp']}x{p['tp']:<6} "
+                f"{o['step_time_s']:>10.4g} {o['mfu']:>6.3f} "
+                f"{o['hbm_gib']:>8.2f} {int(o['gpus']):>5} "
+                f"{int(o['watts']):>7} {p['bound']:<10}")
+
+    def add_axis_arguments(self, ap) -> None:
+        add_workload_arguments(ap)
+        g = ap.add_argument_group("cuda campaign axes")
+        g.add_argument("--gpus", default="8,16,32",
+                       help="comma list of GPU counts (powers of two)")
+        g.add_argument("--gpu-types", default="a100-80g",
+                       help="comma list from: " + ",".join(sorted(GPUS)))
+
+    def cells_from_args(self, args) -> list[CUDACell]:
+        return self.expand_cells(
+            archs=_csv(args.archs), shapes=_csv(args.shapes),
+            gpus=[int(n) for n in _csv(args.gpus)],
+            gpu_types=tuple(_csv(args.gpu_types)),
+            remats=tuple(_csv(args.remats)),
+            microbatches=tuple(int(m) for m in _csv(args.microbatches)))
+
+
+# ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
 
 BACKENDS: dict[str, Backend] = {b.name: b for b in (FPGABackend(),
-                                                    TPUBackend())}
+                                                    TPUBackend(),
+                                                    CUDABackend())}
 
 
 def get_backend(backend: str | Backend) -> Backend:

@@ -1,6 +1,7 @@
 """CLI for DSE campaigns: ranked report + Pareto frontier dump, for any
 registered backend (``--backend fpga`` is the default and the paper's
-flow; ``--backend tpu`` sweeps the analytic TPU planner).
+flow; ``--backend tpu`` sweeps the analytic TPU planner; ``--backend
+cuda`` sweeps the GPU roofline with the GPU part as a campaign axis).
 
     python -m repro.dse.campaign --nets vgg16,alexnet --fpgas ku115,zcu102 \\
         --precisions 16,8 --batch-caps 1,8 --workers 4 \\
@@ -9,6 +10,14 @@ flow; ``--backend tpu`` sweeps the analytic TPU planner).
     python -m repro.dse.campaign --backend tpu --archs starcoder2-3b \\
         --shapes train_4k,decode_32k --chips 8,16,32 \\
         --store results/dse_tpu.jsonl
+
+    python -m repro.dse.campaign --backend cuda --archs starcoder2-3b \\
+        --shapes train_4k --gpus 8,16 --gpu-types a100-80g,h100 \\
+        --store results/dse_cuda.jsonl
+
+Stores render to Markdown with ``python -m repro.dse.report <store>``;
+two stores (e.g. the tpu and cuda campaigns above) compare with
+``python -m repro.dse.report --compare A.jsonl B.jsonl``.
 """
 from __future__ import annotations
 
@@ -19,15 +28,15 @@ import os
 from .backends import (BACKENDS, get_backend, parse_inputs,  # noqa: F401
                        parse_weights)
 from .campaign import CampaignReport, run_campaign
-from .pareto import non_dominated, select_diverse
+from .pareto import diverse_front
 from .store import ResultStore
 
 
 def print_report(report: CampaignReport, weights: dict | None,
                  top: int) -> list[dict]:
     """Print the ranked + frontier tables; returns the first Pareto front
-    (in campaign-cell order) so callers can reuse it without redoing the
-    O(n^2) dominance sort."""
+    (crowding-distance order, extremes first) so callers can reuse it
+    without redoing the O(n^2) dominance sort."""
     be = report._backend()
     print(f"\n== campaign[{be.name}]: {len(report.cells)} cells "
           f"({report.new_cells} new, {report.reused_cells} reused; "
@@ -42,17 +51,17 @@ def print_report(report: CampaignReport, weights: dict | None,
 
     feas = report.feasible()
     vecs = [be.canonical(r["objectives"]) for r in feas]
-    front_idx = non_dominated(vecs)
-    front = [feas[i] for i in front_idx]
+    # print the frontier as a diversity-ordered spread (rank, then
+    # crowding distance) so a truncated read-off still covers the surface
+    order = diverse_front(vecs)
+    front = [feas[i] for i in order]
     names = ", ".join(f"{s.name}[{'max' if s.maximize else 'min'}]"
                       for s in be.objectives)
     print(f"\n-- Pareto frontier: {len(front)} of "
           f"{len(feas)} feasible designs ({names}) --")
     print(be.table_header())
-    # print the frontier as a diversity-ordered spread (rank, then
-    # crowding distance) so a truncated read-off still covers the surface
-    for j in select_diverse([vecs[i] for i in front_idx], len(front_idx)):
-        print(be.table_row(front[j]))
+    for rec in front:
+        print(be.table_row(rec))
     return front
 
 
@@ -62,7 +71,8 @@ def main(argv: list[str] | None = None) -> CampaignReport:
         description="Batch multi-objective DSE campaign over a backend's "
                     "axis grid (fpga: net x input x FPGA x precision x "
                     "batch cap; tpu: arch x shape x chips x remat x "
-                    "microbatches).")
+                    "microbatches; cuda: the tpu axes with a GPU-part "
+                    "axis instead of chips).")
     ap.add_argument("--backend", choices=sorted(BACKENDS), default="fpga",
                     help="device family to sweep (default: fpga, the "
                          "paper's flow)")

@@ -13,6 +13,10 @@ Two layers live here:
   :func:`scalarize_values`) work on any ``{name: value}`` objectives dict
   against any :class:`ObjectiveSpec` schema — each campaign backend
   (:mod:`repro.dse.backends`) declares its own schema and reuses these;
+* the *normalized* cross-backend schema (:data:`NORMALIZED_OBJECTIVES` +
+  :func:`normalized_throughput`): delivered TFLOP/s, per watt, per
+  dollar-proxy, and per peak TFLOP — units every device family can emit,
+  so one frontier can compare FPGA, TPU, and GPU designs;
 * the FPGA-specific :class:`Objectives` dataclass (the paper's five
   quantities) keeps the original typed API and record layout.
 """
@@ -44,6 +48,46 @@ OBJECTIVE_NAMES: tuple[str, ...] = tuple(s.name for s in OBJECTIVES)
 
 #: The paper's original search objective (single-objective special case).
 DEFAULT_WEIGHTS: Mapping[str, float] = {"throughput_ips": 1.0}
+
+
+#: The cross-backend objective vector: every backend can express its
+#: designs in these units (useful TFLOP/s achieved, then that throughput
+#: normalized by board power, by an hourly dollar proxy, and by the
+#: part's peak TFLOP/s), so ONE Pareto frontier can compare device
+#: families. ``tflops_per_peak`` generalizes the paper's DSP efficiency
+#: and the TPU side's MFU; the watt/dollar terms follow Being-ahead's
+#: practice of ranking heterogeneous accelerators on delivered
+#: performance per unit cost rather than raw throughput. All values are
+#: analytic-model predictions (roofline upper bounds with recompute
+#: FLOPs excluded from the numerator), comparable across families
+#: because every family is modeled the same way — they rank designs,
+#: they don't certify absolute hardware numbers.
+NORMALIZED_OBJECTIVES: tuple[ObjectiveSpec, ...] = (
+    ObjectiveSpec("tflops", True, "TFLOP/s"),
+    ObjectiveSpec("tflops_per_watt", True, "TFLOP/s/W"),
+    ObjectiveSpec("tflops_per_dollar", True, "TFLOP/s/($/h)"),
+    ObjectiveSpec("tflops_per_peak", True, "frac"),
+)
+
+#: Raw delivered throughput ranks cross-backend winners by default;
+#: re-weight with e.g. ``tflops_per_watt=1`` for efficiency frontiers.
+NORMALIZED_DEFAULT_WEIGHTS: Mapping[str, float] = {"tflops": 1.0}
+
+
+def normalized_throughput(tflops: float, watts: float, usd_per_hour: float,
+                          peak_tflops: float, *,
+                          feasible: bool = True) -> dict:
+    """Fold one design's delivered TFLOP/s and its hardware's power/price/
+    peak into the :data:`NORMALIZED_OBJECTIVES` vector. Each backend's
+    ``normalized(record)`` reduces to this after computing its own
+    delivered-throughput and hardware terms."""
+    return {
+        "tflops": tflops,
+        "tflops_per_watt": tflops / watts if watts else 0.0,
+        "tflops_per_dollar": tflops / usd_per_hour if usd_per_hour else 0.0,
+        "tflops_per_peak": tflops / peak_tflops if peak_tflops else 0.0,
+        "feasible": bool(feasible),
+    }
 
 
 def canonical_vector(values: Mapping[str, float],

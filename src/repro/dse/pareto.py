@@ -96,6 +96,22 @@ def crowding_distance(vectors: Sequence[Vector]) -> list[float]:
     return dist
 
 
+def diverse_front(vectors: Sequence[Vector],
+                  k: int | None = None) -> list[int]:
+    """Indices of the FIRST front only, ordered by crowding distance
+    (extremes first, clumps thinned), optionally truncated to ``k``.
+
+    This is the one frontier read-off every consumer wants — per-backend
+    report tables, the CLI dump, and the cross-backend frontier over the
+    normalized objective schema — as opposed to :func:`select_diverse`,
+    which tops up from later fronts to fill ``k``.
+    """
+    idx = non_dominated(vectors)
+    sub = [vectors[i] for i in idx]
+    order = select_diverse(sub, len(sub) if k is None or k <= 0 else k)
+    return [idx[j] for j in order]
+
+
 def select_diverse(vectors: Sequence[Vector], k: int) -> list[int]:
     """Up to ``k`` indices by NSGA-II ranking: whole fronts in order, the
     last partially-admitted front truncated to its most-spread members

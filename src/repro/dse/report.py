@@ -12,18 +12,31 @@ a human-readable Markdown report under ``docs/reports/``:
   efficiency/latency trade-off per workload rather than a single scalar;
 * **objective trade-off summaries** — for each objective, the frontier
   design that is best at it and what that choice costs on the others;
+* a **cross-backend frontier** whenever a store mixes device families:
+  every record re-expressed in the normalized objective schema
+  (delivered TFLOP/s, per watt, per dollar-proxy, per peak TFLOP) and
+  Pareto-sorted into ONE frontier, plus per-backend champions;
 * an optional **benchmark appendix** from ``benchmarks/run.py --json``
   output, so paper-figure reproductions land in the same document.
+
+A second mode, ``--compare``, takes TWO OR MORE stores (e.g. the same
+campaign re-run over time, or sibling backends' campaigns) and renders the
+*trajectory* between them: per-workload winner deltas, best-normalized-
+objective trajectories across the store sequence, and a pooled
+cross-backend frontier annotated with which store each design came from.
 
 CLI (also ``python -m repro.dse.report``)::
 
     python -m repro.dse.report results/dse.jsonl --out docs/reports/fpga.md
     python -m repro.dse.report results/dse_tpu.jsonl --bench bench.json
+    python -m repro.dse.report --compare results/dse_tpu.jsonl \\
+        results/dse_cuda.jsonl --out docs/reports/tpu_vs_cuda.md
     python -m repro.dse.report --selftest   # render the built-in fixture
 
-``--selftest`` renders a small built-in fixture store through the full
-pipeline and fails loudly if anything in the render path regresses — CI
-runs it as the docs check.
+``--selftest`` renders a small built-in fixture store (all three
+backends) through the full pipeline — including the cross-backend and
+compare paths — and fails loudly if anything regresses; CI runs it as
+the docs check.
 """
 from __future__ import annotations
 
@@ -33,7 +46,9 @@ from pathlib import Path
 from typing import Mapping, Sequence
 
 from .backends import BACKENDS, get_backend, record_backend
-from .pareto import non_dominated, select_diverse
+from .objectives import (NORMALIZED_DEFAULT_WEIGHTS, NORMALIZED_OBJECTIVES,
+                         canonical_vector, scalarize_values)
+from .pareto import diverse_front
 from .store import ResultStore
 
 #: Where reports land unless --out says otherwise.
@@ -91,18 +106,17 @@ def _backend_section(name: str, recs: list[dict], k: int) -> list[str]:
         return lines
 
     vecs = [be.canonical(r["objectives"]) for r in feas]
-    front_idx = non_dominated(vecs)
-    front = [feas[i] for i in front_idx]
-    fvecs = [vecs[i] for i in front_idx]
     # diversity order: whole front sorted by crowding so the top rows
     # are the spread, not a clump around one region
-    order = select_diverse(fvecs, len(fvecs))
+    order = diverse_front(vecs)
+    front = [feas[i] for i in order]
+    fvecs = [vecs[i] for i in order]
 
     lines += [f"### Pareto frontier ({len(front)} of {len(feas)} feasible, "
               f"crowding-distance order)", ""]
     cols = ["cell"] + _objective_columns(be)
-    rows = [[f"`{front[i]['cell_key']}`"] + _objective_values(be, front[i])
-            for i in order[:len(front) if k <= 0 else k]]
+    rows = [[f"`{r['cell_key']}`"] + _objective_values(be, r)
+            for r in front[:len(front) if k <= 0 else k]]
     shown = len(rows)
     lines += _table(cols, rows)
     if shown < len(front):
@@ -135,6 +149,181 @@ def _backend_section(name: str, recs: list[dict], k: int) -> list[str]:
     lines += _table(["best at", "cell"] + _objective_columns(be), rows)
     lines += [""]
     return lines
+
+
+def _normalized_rows(records: Sequence[Mapping],
+                     label: str | None = None) -> list[dict]:
+    """Feasible records of known backends, re-expressed in the
+    cross-backend normalized schema: ``{rec, backend, norm, label}``."""
+    rows = []
+    for r in records:
+        name = record_backend(r)
+        if name not in BACKENDS:
+            continue
+        be = get_backend(name)
+        try:
+            norm = be.normalized(r)
+        except (KeyError, TypeError):
+            continue  # foreign/truncated record: not normalizable
+        if norm["feasible"]:
+            rows.append({"rec": r, "backend": name, "norm": norm,
+                         "label": label})
+    return rows
+
+
+def _norm_score(row: Mapping) -> float:
+    return scalarize_values(row["norm"], NORMALIZED_OBJECTIVES, None,
+                            NORMALIZED_DEFAULT_WEIGHTS)
+
+
+def _normalized_columns() -> list[str]:
+    return [f"{s.name} (max, {s.units})" for s in NORMALIZED_OBJECTIVES]
+
+
+def _normalized_values(norm: Mapping) -> list:
+    return [norm[s.name] for s in NORMALIZED_OBJECTIVES]
+
+
+def _cross_backend_section(records: Sequence[Mapping], k: int,
+                           labeled: bool = False) -> list[str]:
+    """One frontier across device families: every feasible record mapped
+    to the normalized objective schema, Pareto-sorted together."""
+    rows_in = (_normalized_rows(records) if not labeled else list(records))
+    lines = ["## Cross-backend frontier (normalized objectives)", ""]
+    if not rows_in:
+        lines += ["_No normalizable feasible designs._", ""]
+        return lines
+    names = sorted({x["backend"] for x in rows_in})
+    lines += [f"{len(rows_in)} feasible cells from backend(s) "
+              + ", ".join(f"`{n}`" for n in names)
+              + ", compared in normalized units: "
+              + ", ".join(f"`{s.name}` ({s.units})"
+                          for s in NORMALIZED_OBJECTIVES)
+              + ". Hardware watt/dollar/peak terms come from the spec "
+                "tables in `repro.core.hw_specs`.", ""]
+
+    vecs = [canonical_vector(x["norm"], NORMALIZED_OBJECTIVES)
+            for x in rows_in]
+    order = diverse_front(vecs)
+    shown = order[:len(order) if k <= 0 else k]
+    cols = ((["store"] if labeled else []) + ["backend", "cell"]
+            + _normalized_columns())
+    rows = []
+    for i in shown:
+        x = rows_in[i]
+        rows.append(([x["label"]] if labeled else [])
+                    + [f"`{x['backend']}`", f"`{x['rec']['cell_key']}`"]
+                    + _normalized_values(x["norm"]))
+    lines += [f"### Frontier ({len(order)} of {len(rows_in)} designs, "
+              f"crowding-distance order)", ""]
+    lines += _table(cols, rows)
+    if len(shown) < len(order):
+        lines += ["", f"_{len(order) - len(shown)} more frontier designs "
+                      f"(rerun with `--top {len(order)}`)._"]
+    lines += [""]
+
+    # per-backend champions under the default normalized scalarization
+    lines += [f"### Backend champions (best by "
+              f"{dict(NORMALIZED_DEFAULT_WEIGHTS)})", ""]
+    best_overall = max(_norm_score(x) for x in rows_in)
+    rows = []
+    for n in names:
+        champ = max((x for x in rows_in if x["backend"] == n),
+                    key=_norm_score)
+        ratio = (_norm_score(champ) / best_overall) if best_overall else 0.0
+        rows.append([f"`{n}`", f"`{champ['rec']['cell_key']}`"]
+                    + _normalized_values(champ["norm"])
+                    + [f"{ratio:.2f}x"])
+    lines += _table(["backend", "cell"] + _normalized_columns()
+                    + ["vs best"], rows)
+    lines += [""]
+    return lines
+
+
+# ---------------------------------------------------------------------------
+# store comparison (--compare): winner deltas + objective trajectories
+# ---------------------------------------------------------------------------
+
+
+def _pct(new: float, old: float) -> str:
+    if not old:
+        return "n/a"
+    return f"{(new - old) / old * 100:+.1f}%"
+
+
+def render_compare(stores: Sequence[tuple[str, Sequence[Mapping]]], *,
+                   title: str | None = None, k: int = 12) -> str:
+    """Two or more (label, records) stores -> a Markdown comparison.
+
+    The store ORDER is the trajectory: deltas are last-vs-first, so
+    passing two snapshots of the same campaign shows perf drift over
+    time, and passing sibling backends' stores shows which family wins
+    each workload and by how much.
+    """
+    if len(stores) < 2:
+        raise ValueError("compare needs at least two stores")
+    labels = [lab for lab, _ in stores]
+    title = title or ("DSE store comparison — " + " vs ".join(labels))
+    per_store = [(lab, _normalized_rows(recs, lab)) for lab, recs in stores]
+
+    lines = [f"# {title}", ""]
+    rows = []
+    for (lab, recs), (_, rows_n) in zip(stores, per_store):
+        backends = sorted({record_backend(r) for r in recs})
+        best = max(map(_norm_score, rows_n), default=0.0)
+        rows.append([lab, len(recs), ", ".join(f"`{b}`" for b in backends),
+                     len(rows_n), best])
+    lines += _table(["store", "cells", "backends", "feasible (normalizable)",
+                     f"best {dict(NORMALIZED_DEFAULT_WEIGHTS)}"], rows)
+    lines += [""]
+
+    # objective trajectories: best normalized value per store, in order
+    lines += ["## Objective trajectories (best per store, in store order)",
+              ""]
+    rows = []
+    for spec in NORMALIZED_OBJECTIVES:
+        bests = [max((x["norm"][spec.name] for x in rows_n), default=0.0)
+                 for _, rows_n in per_store]
+        rows.append([f"`{spec.name}` ({spec.units})"] + bests
+                    + [_pct(bests[-1], bests[0])])
+    lines += _table(["objective"] + labels + ["last vs first"], rows)
+    lines += [""]
+
+    # per-workload winner deltas
+    lines += ["## Per-workload winner deltas", "",
+              "Best design per workload per store under the default "
+              f"normalized scalarization {dict(NORMALIZED_DEFAULT_WEIGHTS)}; "
+              "delta compares the LAST store against the FIRST.", ""]
+    groups: dict[str, dict[str, dict]] = {}
+    for lab, rows_n in per_store:
+        for x in rows_n:
+            g = get_backend(x["backend"]).group_key(x["rec"])
+            cur = groups.setdefault(g, {})
+            if lab not in cur or _norm_score(x) > _norm_score(cur[lab]):
+                cur[lab] = x
+    rows = []
+    for g in sorted(groups):
+        per_lab = groups[g]
+        scores = [(_norm_score(per_lab[lab]) if lab in per_lab else None)
+                  for lab in labels]
+        present = [s for s in scores if s is not None]
+        win_i = scores.index(max(present))
+        winner = per_lab[labels[win_i]]
+        delta = (_pct(scores[-1], scores[0])
+                 if scores[0] is not None and scores[-1] is not None
+                 else "n/a")
+        rows.append([g]
+                    + [f"{s:.4g}" if s is not None else "—" for s in scores]
+                    + [delta, labels[win_i],
+                       f"`{winner['rec']['cell_key']}`"])
+    lines += _table(["workload"] + [f"{lab} tflops" for lab in labels]
+                    + ["Δ last vs first", "winner", "winning cell"], rows)
+    lines += [""]
+
+    # pooled cross-backend frontier, annotated with source store
+    pooled = [x for _, rows_n in per_store for x in rows_n]
+    lines += _cross_backend_section(pooled, k, labeled=True)
+    return "\n".join(lines).rstrip() + "\n"
 
 
 def _bench_section(bench: Mapping) -> list[str]:
@@ -170,6 +359,8 @@ def render_report(records: Sequence[Mapping], *,
                       f"(unknown backend; skipped)", ""]
             continue
         lines += _backend_section(name, groups[name], k)
+    if len([n for n in groups if n in BACKENDS]) > 1:
+        lines += _cross_backend_section(list(records), k)
     if bench:
         lines += _bench_section(bench)
     return "\n".join(lines).rstrip() + "\n"
@@ -181,9 +372,10 @@ def render_report(records: Sequence[Mapping], *,
 
 
 def fixture_records() -> list[dict]:
-    """A tiny deterministic two-backend store: enough shape variety to
-    exercise frontier extraction, crowding order, winner grouping, and
-    trade-off tables without running any search."""
+    """A tiny deterministic three-backend store: enough shape variety to
+    exercise frontier extraction, crowding order, winner grouping,
+    trade-off tables, and the cross-backend normalized frontier without
+    running any search."""
     recs = []
     fpga_pts = [  # (net, h, fpga, ips, gops, lat_ms, eff, bram, feasible)
         ("vgg16", 224, "ku115", 145.0, 4220.0, 6.9, 0.764, 1800, True),
@@ -237,6 +429,34 @@ def fixture_records() -> list[dict]:
             "search": {"weights": None},
             "evaluations": 4,
         })
+    cuda_pts = [  # (arch, shape, gpu, n, remat, mb, dp, tp,
+                  #  step, mfu, hbm, watts, ok)
+        ("starcoder2-3b", "train_4k", "a100-80g", 8, "full", 2, 8, 1,
+         11.5, 0.62, 10.4, 3200.0, True),
+        ("starcoder2-3b", "train_4k", "h100", 8, "full", 2, 8, 1,
+         3.7, 0.55, 10.4, 5600.0, True),
+        ("starcoder2-3b", "train_4k", "a100-40g", 8, "none", 1, 8, 1,
+         2.9, 0.71, 41.0, 3200.0, False),
+        ("starcoder2-3b", "decode_32k", "h100", 8, "none", 1, 8, 1,
+         0.009, 0.04, 14.9, 5600.0, True),
+        ("xlstm-350m", "train_4k", "a100-40g", 8, "full", 1, 8, 1,
+         0.92, 0.49, 2.4, 3200.0, True),
+    ]
+    for arch, shape, gpu, n, remat, mb, dp, tp, step, mfu, hbm, w, ok \
+            in cuda_pts:
+        recs.append({
+            "schema": 1,
+            "backend": "cuda",
+            "cell_key": (f"arch={arch}|shape={shape}|gpu={gpu}|gpus={n}"
+                         f"|remat={remat}|mb={mb}"),
+            "cell": {"arch": arch, "shape": shape, "gpu": gpu, "gpus": n,
+                     "remat": remat, "microbatches": mb},
+            "plan": {"dp": dp, "tp": tp, "bound": "compute"},
+            "objectives": {"step_time_s": step, "mfu": mfu, "hbm_gib": hbm,
+                           "gpus": float(n), "watts": w, "feasible": ok},
+            "search": {"weights": None},
+            "evaluations": 4,
+        })
     return recs
 
 
@@ -252,6 +472,11 @@ def main(argv: list[str] | None = None) -> int:
                     "(plus optional benchmarks/run.py --json output).")
     ap.add_argument("store", nargs="?", default=None,
                     help="campaign JSONL store (any backend or a mix)")
+    ap.add_argument("--compare", nargs="+", default=None, metavar="STORE",
+                    help="compare mode: two or more stores, in trajectory "
+                         "order — renders per-workload winner deltas, "
+                         "normalized objective trajectories, and a pooled "
+                         "cross-backend frontier")
     ap.add_argument("--bench", default=None, metavar="JSON",
                     help="benchmarks/run.py --json output to append")
     ap.add_argument("--out", default=None, metavar="MD",
@@ -266,19 +491,57 @@ def main(argv: list[str] | None = None) -> int:
     args = ap.parse_args(argv)
 
     if args.selftest:
-        md = render_report(fixture_records(), title="selftest campaign",
-                           k=args.top)
+        fix = fixture_records()
+        md = render_report(fix, title="selftest campaign", k=args.top)
+        half = [r for r in fix if r.get("backend") != "cuda"]
+        cmp_md = render_compare([("tpu+fpga", half),
+                                 ("all", fix)], k=args.top)
         for must in ("Pareto frontier", "Backend `fpga`", "Backend `tpu`",
-                     "Per-workload winners", "Objective trade-offs"):
+                     "Backend `cuda`", "Per-workload winners",
+                     "Objective trade-offs", "Cross-backend frontier",
+                     "Backend champions"):
             if must not in md:
                 raise SystemExit(f"selftest: section {must!r} missing "
                                  f"from rendered report")
-        print(f"selftest OK: rendered {len(md)} chars, "
-              f"{md.count(chr(10))} lines, all sections present")
+        for must in ("Per-workload winner deltas", "Objective trajectories",
+                     "Cross-backend frontier"):
+            if must not in cmp_md:
+                raise SystemExit(f"selftest: section {must!r} missing "
+                                 f"from compare report")
+        print(f"selftest OK: rendered {len(md)} + {len(cmp_md)} chars, "
+              f"all sections present")
+        return 0
+
+    if args.compare:
+        if args.bench:
+            ap.error("--bench only applies to single-store reports, "
+                     "not --compare")
+        if args.store:
+            args.compare = [args.store] + args.compare
+        if len(args.compare) < 2:
+            ap.error("--compare needs at least two stores")
+        stores, labels = [], []
+        for path in args.compare:
+            s = ResultStore(path)
+            if not len(s):
+                ap.error(f"store {path} is empty or missing")
+            stem = Path(path).stem
+            n_seen = sum(1 for l in labels if l.split("#")[0] == stem)
+            lab = stem if not n_seen else f"{stem}#{n_seen + 1}"
+            labels.append(lab)
+            stores.append((lab, s.records()))
+        md = render_compare(stores, title=args.title, k=args.top)
+        out = Path(args.out) if args.out else \
+            DEFAULT_REPORT_DIR / ("compare_" + "_vs_".join(
+                Path(p).stem for p in args.compare[:2]) + ".md")
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(md)
+        print(f"compare report -> {out} ({len(md)} chars, "
+              f"{len(stores)} stores)")
         return 0
 
     if not args.store:
-        ap.error("a store path is required (or use --selftest)")
+        ap.error("a store path is required (or use --selftest / --compare)")
     store = ResultStore(args.store)
     if not len(store):
         ap.error(f"store {args.store} is empty or missing")

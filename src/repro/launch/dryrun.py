@@ -18,23 +18,15 @@ import argparse
 import json
 import time
 import traceback
-from functools import partial
 
-import jax
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, SHAPES, cell_enabled, get_config
-from repro.configs.base import ArchConfig, ShapeSpec
 from repro.launch.hlo_cost import exact_cost
 from repro.launch.hlo_stats import (collective_stats, cost_summary,
                                     memory_summary)
 from repro.train.steps import BASELINE, OPTIMIZED, build_step
 from repro.launch.mesh import make_production_mesh
-from repro.launch.specs import input_specs
-from repro.models import api
-from repro.optim import adamw
 from repro.parallel import act
-from repro.parallel import sharding as shd
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,

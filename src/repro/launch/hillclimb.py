@@ -12,7 +12,6 @@ import argparse
 import json
 import time
 
-import jax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, get_config

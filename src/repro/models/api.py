@@ -4,9 +4,7 @@ dry-run touch goes through these five functions.
 """
 from __future__ import annotations
 
-from functools import partial
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig

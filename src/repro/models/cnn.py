@@ -10,7 +10,6 @@ The conv compute can route through the Pallas direct-conv kernel
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -8,14 +8,13 @@ sinusoidal positions follow the Whisper paper.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.parallel.act import constrain
-from .layers import (dense_init, embed_init, gqa_attention,
+from .layers import (embed_init, gqa_attention,
                      gqa_decode_attention, init_attention, init_layernorm,
                      init_mlp, layer_norm, mlp)
 from .transformer import _stack

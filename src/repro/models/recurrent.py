@@ -6,12 +6,11 @@ on these (and on SWA archs) while pure full-attention archs skip it.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, SSMCfg
+from repro.configs.base import ArchConfig
 from repro.parallel.act import constrain
 from .layers import (dense_init, embed_init, gqa_attention,
                      gqa_decode_attention, init_attention, init_mlp,

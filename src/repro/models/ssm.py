@@ -10,14 +10,13 @@ full-attention ones.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, SSMCfg
+from repro.configs.base import SSMCfg
 from repro.parallel.act import constrain
-from .layers import dense_init, embed_init, init_rmsnorm, rms_norm
+from .layers import dense_init, init_rmsnorm, rms_norm
 
 
 # ---------------------------------------------------------------------------

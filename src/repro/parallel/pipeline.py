@@ -13,7 +13,6 @@ permutation), so it composes with jax.grad for training.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -17,11 +17,9 @@ from __future__ import annotations
 import dataclasses
 import logging
 import time
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import store

@@ -1,0 +1,104 @@
+"""Tests for the CI benchmark regression gate (benchmarks/compare.py)."""
+import json
+
+from benchmarks.compare import _rows, compare, main
+
+
+def _dump(rows):
+    return {"benchmarks": {"b": [{"name": n, "us_per_call": us,
+                                  "derived": ""} for n, us in rows]}}
+
+
+def test_rows_flatten():
+    assert _rows(_dump([("x", 10.0), ("y", 20.0)])) == \
+        {"b/x": 10.0, "b/y": 20.0}
+    assert _rows({}) == {}
+
+
+def test_no_regression_when_identical():
+    d = _dump([("x", 1000.0), ("y", 2000.0)])
+    res = compare(d, d)
+    assert res["regressions"] == [] and res["improvements"] == []
+    assert res["scale"] == 1.0
+    assert res["checked"] == 2
+
+
+def test_detects_single_row_regression():
+    base = _dump([("x", 1000.0), ("y", 1000.0), ("z", 1000.0)])
+    new = _dump([("x", 1000.0), ("y", 1000.0), ("z", 2000.0)])
+    res = compare(new, base)
+    assert [e["row"] for e in res["regressions"]] == ["b/z"]
+    assert res["regressions"][0]["relative"] > 1.3
+
+
+def test_calibration_forgives_uniformly_slow_machines():
+    """A 2x slower runner (every row 2x the baseline) is machine speed,
+    not a regression; a single hot row on top of that still trips."""
+    base = _dump([("x", 1000.0), ("y", 1000.0), ("z", 1000.0)])
+    slow = _dump([("x", 2000.0), ("y", 2000.0), ("z", 2000.0)])
+    assert compare(slow, base)["regressions"] == []
+    hot = _dump([("x", 2000.0), ("y", 2000.0), ("z", 5000.0)])
+    res = compare(hot, base)
+    assert [e["row"] for e in res["regressions"]] == ["b/z"]
+    # without calibration everything trips
+    raw = compare(slow, base, calibrate=False)
+    assert len(raw["regressions"]) == 3
+
+
+def test_min_us_floor_skips_noise_rows():
+    base = _dump([("noisy", 50.0), ("real", 10000.0)])
+    new = _dump([("noisy", 500.0), ("real", 10000.0)])
+    res = compare(new, base, min_us=200.0)
+    assert res["regressions"] == []
+    assert "b/noisy" in res["skipped"]
+
+
+def test_new_and_missing_rows_are_reported_not_fatal():
+    base = _dump([("x", 1000.0), ("gone", 1000.0)])
+    new = _dump([("x", 1000.0), ("fresh", 1000.0)])
+    res = compare(new, base)
+    assert res["only_new"] == ["b/fresh"]
+    assert res["only_baseline"] == ["b/gone"]
+    assert res["regressions"] == []
+
+
+def test_main_gate_and_update_baseline(tmp_path, capsys):
+    base_p = tmp_path / "baseline.json"
+    new_p = tmp_path / "bench.json"
+    new_p.write_text(json.dumps(_dump([("x", 1000.0), ("y", 1000.0)])))
+
+    # no baseline yet -> exit 2 with a hint
+    assert main([str(new_p), "--baseline", str(base_p)]) == 2
+    # record it
+    assert main([str(new_p), "--baseline", str(base_p),
+                 "--update-baseline"]) == 0
+    assert json.loads(base_p.read_text()) == json.loads(new_p.read_text())
+    # identical run passes
+    assert main([str(new_p), "--baseline", str(base_p)]) == 0
+    out = capsys.readouterr().out
+    assert "OK" in out
+    # regressing one of two rows fails (too few anchors for calibration,
+    # so the raw 3x ratio trips the gate directly)
+    new_p.write_text(json.dumps(_dump([("x", 1000.0), ("y", 3000.0)])))
+    assert main([str(new_p), "--baseline", str(base_p)]) == 1
+    assert "REGRESSED" in capsys.readouterr().out
+
+
+def test_gated_rows_cannot_self_mask_via_calibration():
+    """The CI shape: many sub-min_us anchor rows + few gated rows. A
+    uniform slowdown of ONLY the gated rows must still trip — the
+    anchors, not the gated rows, set the machine-speed scale."""
+    micro = [(f"m{i}", 100.0) for i in range(10)]
+    base = _dump(micro + [("camp_a", 100000.0), ("camp_b", 200000.0)])
+    both_slow = _dump(micro + [("camp_a", 200000.0), ("camp_b", 400000.0)])
+    res = compare(both_slow, base, min_us=5000.0)
+    assert {e["row"] for e in res["regressions"]} == \
+        {"b/camp_a", "b/camp_b"}
+    # and a genuinely 2x-slower machine (everything doubles) still passes
+    all_slow = _dump([(n, 2 * us) for n, us in
+                      micro + [("camp_a", 100000.0), ("camp_b", 200000.0)]])
+    assert compare(all_slow, base, min_us=5000.0)["regressions"] == []
+    # too few anchors -> raw comparison, never a silent scale of 2
+    two_rows = _dump([("camp_a", 200000.0), ("camp_b", 400000.0)])
+    two_base = _dump([("camp_a", 100000.0), ("camp_b", 200000.0)])
+    assert len(compare(two_rows, two_base, min_us=5000.0)["regressions"]) == 2

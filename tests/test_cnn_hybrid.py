@@ -6,7 +6,6 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.netinfo import _B, vgg16
 from repro.models.cnn import HybridPlan, forward, hybrid_forward, init_vgg

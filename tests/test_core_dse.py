@@ -1,5 +1,4 @@
 """Unit + property tests for the DNNExplorer core (analysis, models, DSE)."""
-import math
 
 import pytest
 
@@ -7,7 +6,7 @@ from repro.core import (KU115, RAV, ZC706, PSOConfig, dnnbuilder_design,
                         evaluate_rav, explore, generic_only_design, optimize)
 from repro.core.generic_model import GenericDesign
 from repro.core.local_opt import dpu_proxy_design
-from repro.core.netinfo import INPUT_CASES, TABLE1_NETS, vgg16
+from repro.core.netinfo import TABLE1_NETS, vgg16
 from repro.core.pipeline_model import design_pipeline, split_pf
 
 try:

@@ -114,16 +114,50 @@ def test_canonical_vector_and_scalarize_values_generic():
 
 
 # ---------------------------------------------------------------------------
+# CLI axis parsing (edge cases)
+# ---------------------------------------------------------------------------
+
+
+def test_parse_inputs_edge_cases():
+    from repro.dse.backends import parse_inputs
+    assert parse_inputs("224") == [(224, 224)]
+    assert parse_inputs("320x480") == [(320, 480)]
+    assert parse_inputs(" 224 ,  320x480 ") == [(224, 224), (320, 480)]
+    assert parse_inputs("320 x 480") == [(320, 480)]  # int() strips spaces
+    assert parse_inputs("224x") == [(224, 224)]       # trailing x: square
+    assert parse_inputs("") == []
+    assert parse_inputs(", ,") == []
+    for bad in ("abc", "x224", "320xx480", "320x480x640", "3.5"):
+        with pytest.raises(ValueError, match="bad input size"):
+            parse_inputs(bad)
+
+
+def test_parse_weights_edge_cases():
+    from repro.dse.backends import parse_weights
+    assert parse_weights("") is None
+    assert parse_weights("a=1,b=2.5") == {"a": 1.0, "b": 2.5}
+    assert parse_weights(" a = 1 ") == {"a": 1.0}  # whitespace stripped
+    # empty value and bare name both mean weight 1.0
+    assert parse_weights("mfu=") == {"mfu": 1.0}
+    assert parse_weights("mfu") == {"mfu": 1.0}
+    assert parse_weights("step_time_s=-2") == {"step_time_s": -2.0}
+    with pytest.raises(ValueError, match="bad weight token"):
+        parse_weights("=5")
+    with pytest.raises(ValueError, match="bad weight value"):
+        parse_weights("mfu=fast")
+
+
+# ---------------------------------------------------------------------------
 # registry + fpga byte-compat
 # ---------------------------------------------------------------------------
 
 
 def test_backend_registry():
-    assert set(BACKENDS) == {"fpga", "tpu"}
+    assert set(BACKENDS) == {"fpga", "tpu", "cuda"}
     assert get_backend("fpga") is BACKENDS["fpga"]
     assert get_backend(BACKENDS["tpu"]) is BACKENDS["tpu"]
     with pytest.raises(KeyError):
-        get_backend("gpu")
+        get_backend("npu")
     assert record_backend({"backend": "tpu"}) == "tpu"
     assert record_backend({}) == "fpga"  # legacy PR-1 records
 

@@ -1,0 +1,347 @@
+"""Tests for the CUDA retarget: the GPU roofline model/planner, the
+``cuda`` campaign backend, the normalized cross-backend objectives, and
+the report compare mode."""
+import json
+
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.core.gpu_model import (GPUS, NVLINK_EFFICIENCY, analytic_roofline,
+                                  collective_bw)
+from repro.core.gpu_planner import best_plan, evaluate_point, plan_arch
+from repro.core.hw_specs import A100_40G, A100_80G, H100, TPU_V5E
+from repro.core.tpu_model import MeshDesc
+from repro.core.tpu_planner import evaluate_point as tpu_evaluate_point
+from repro.dse import (NORMALIZED_OBJECTIVES, canonical_vector, diverse_front,
+                       normalized_throughput, run_campaign, scalarize_values)
+from repro.dse.backends import BACKENDS, CUDACell, get_backend
+from repro.dse.cli import main as cli_main
+from repro.dse.report import render_compare, render_report
+from repro.dse.store import ResultStore
+
+
+# ---------------------------------------------------------------------------
+# gpu_model: the SM/HBM/NVLink roofline
+# ---------------------------------------------------------------------------
+
+
+def test_gpu_spec_table_has_required_parts():
+    assert {"a100-40g", "a100-80g", "h100"} <= set(GPUS)
+    for g in GPUS.values():
+        assert g.peak_flops > 0 and g.hbm_bw > 0 and g.nvlink_bw > 0
+        assert g.tdp_watts > 0 and g.usd_per_hour > 0
+    assert A100_80G.hbm_bytes == 2 * A100_40G.hbm_bytes
+    assert H100.peak_flops > A100_80G.peak_flops
+
+
+def test_gpu_roofline_terms_positive_and_bound_named():
+    cfg, shape = get_config("starcoder2-3b"), SHAPES["train_4k"]
+    rl = analytic_roofline(cfg, shape, MeshDesc(8, 8, 1), A100_80G)
+    assert rl.t_compute > 0 and rl.t_memory > 0 and rl.t_collective > 0
+    assert rl.bound in ("compute", "memory", "collective")
+    assert rl.step_time == max(rl.t_compute, rl.t_memory, rl.t_collective)
+
+
+def test_gpu_roofline_h100_beats_a100_at_same_mesh():
+    cfg, shape = get_config("starcoder2-3b"), SHAPES["train_4k"]
+    mesh = MeshDesc(8, 8, 1)
+    a = analytic_roofline(cfg, shape, mesh, A100_80G)
+    h = analytic_roofline(cfg, shape, mesh, H100)
+    assert h.step_time < a.step_time
+
+
+def test_gpu_collective_bw_drops_across_node_boundary():
+    """A mesh inside one NVSwitch domain runs collectives at NVLink rate;
+    one that spans nodes is gated by the per-GPU IB NIC."""
+    within = collective_bw(MeshDesc(8, 8, 1), H100)
+    across = collective_bw(MeshDesc(16, 16, 1), H100)
+    assert within == NVLINK_EFFICIENCY * H100.nvlink_bw
+    assert across == NVLINK_EFFICIENCY * H100.ib_bw
+    assert across < within
+
+
+# ---------------------------------------------------------------------------
+# gpu_planner: parallel to tpu_planner
+# ---------------------------------------------------------------------------
+
+
+def test_gpu_evaluate_point_mirrors_tpu_shape():
+    cfg, shape = get_config("starcoder2-3b"), SHAPES["train_4k"]
+    g = evaluate_point(cfg, shape, 8, 8, 1, "full", 1, A100_80G)
+    t = tpu_evaluate_point(cfg, shape, 8, 8, 1, "full", 1, TPU_V5E)
+    # same fields describe both plans (plus the GPU part name)
+    assert g.gpu == "a100-80g" and g.n_gpus == 8
+    assert (g.dp, g.tp, g.remat, g.microbatches) == \
+        (t.dp, t.tp, t.remat, t.microbatches)
+    # identical workload napkin: same HBM demand model on both sides
+    assert g.hbm_per_gpu == t.hbm_per_chip
+    assert 0 < g.mfu <= 1.0
+    assert "a100-80g" in g.pretty()
+
+
+def test_gpu_hbm_fit_gate_uses_part_capacity():
+    """The same mapping overflows the 40G part but fits the 80G part —
+    HBM demand is workload-side, the gate is hardware-side."""
+    cfg, shape = get_config("starcoder2-3b"), SHAPES["train_4k"]
+    small = evaluate_point(cfg, shape, 8, 8, 1, "none", 2, A100_40G)
+    big = evaluate_point(cfg, shape, 8, 8, 1, "none", 2, A100_80G)
+    assert small.hbm_per_gpu == big.hbm_per_gpu
+    assert small.hbm_per_gpu > A100_40G.hbm_bytes * 0.9
+    assert not small.fits and big.fits
+
+
+def test_mfu_excludes_recompute_flops():
+    """A compute-bound full-remat training design spends 8ND of compute
+    per 6ND of model work: MFU must report 0.75, and the normalized
+    delivered TFLOP/s must stay below the datasheet peak."""
+    cfg, shape = get_config("xlstm-350m"), SHAPES["train_4k"]
+    full = evaluate_point(cfg, shape, 8, 8, 1, "full", 1, H100)
+    none = evaluate_point(cfg, shape, 8, 8, 1, "none", 1, H100)
+    if full.roofline.bound == "compute":
+        assert full.mfu == pytest.approx(0.75)
+    assert none.mfu <= 1.0
+    # and on the TPU side the same accounting holds
+    t = tpu_evaluate_point(cfg, shape, 8, 8, 1, "full", 1, TPU_V5E)
+    if t.roofline.bound == "compute":
+        assert t.mfu == pytest.approx(0.75)
+
+
+def test_gpu_plan_arch_sorts_feasible_first():
+    cfg, shape = get_config("xlstm-350m"), SHAPES["train_4k"]
+    plans = plan_arch(cfg, shape, A100_80G, max_gpus=32)
+    assert plans
+    feas_flags = [p.fits for p in plans]
+    assert feas_flags == sorted(feas_flags, reverse=True), \
+        "all feasible plans must sort before all infeasible ones"
+    assert best_plan(cfg, shape, hw=A100_80G, max_gpus=32).pretty() == \
+        plans[0].pretty()
+
+
+# ---------------------------------------------------------------------------
+# cuda backend: cells, records, campaigns
+# ---------------------------------------------------------------------------
+
+
+def test_cuda_expand_cells_axes_validation_and_collapse():
+    be = get_backend("cuda")
+    cells = be.expand_cells(archs=["starcoder2-3b"],
+                            shapes=["train_4k", "decode_32k"],
+                            gpus=[8, 16], gpu_types=("a100-80g", "h100"),
+                            remats=("full", "none"), microbatches=(1, 2))
+    keys = [c.key for c in cells]
+    assert len(keys) == len(set(keys))
+    # train: 2 types x 2 counts x 2 remats x 2 mb = 16; decode collapses
+    assert sum(c.shape == "train_4k" for c in cells) == 16
+    decode = [c for c in cells if c.shape == "decode_32k"]
+    assert len(decode) == 4
+    assert all(c.remat == "none" and c.microbatches == 1 for c in decode)
+    with pytest.raises(KeyError):
+        be.expand_cells(archs=["starcoder2-3b"], shapes=["train_4k"],
+                        gpus=[8], gpu_types=("rtx4090",))
+    with pytest.raises(ValueError):
+        be.expand_cells(archs=["starcoder2-3b"], shapes=["train_4k"],
+                        gpus=[12])
+    # spec-disabled combos skipped (full attention at 500k context)
+    long = be.expand_cells(archs=["starcoder2-3b", "xlstm-350m"],
+                           shapes=["long_500k"], gpus=[8])
+    assert {c.arch for c in long} == {"xlstm-350m"}
+
+
+def test_cuda_run_cell_schema_and_determinism():
+    be = get_backend("cuda")
+    cell = CUDACell("starcoder2-3b", "train_4k", "h100", 16, "full", 2)
+    rec = be.run_cell(cell)
+    assert rec["backend"] == "cuda"
+    assert rec["cell_key"] == cell.key
+    assert rec["cell"]["gpu"] == "h100"
+    assert set(rec["objectives"]) == {"step_time_s", "mfu", "hbm_gib",
+                                      "gpus", "watts", "feasible"}
+    assert rec["objectives"]["watts"] == 16 * 700.0
+    assert rec["plan"]["dp"] * rec["plan"]["tp"] == 16
+    assert rec["evaluations"] > 0
+    json.dumps(rec)  # JSONL-serializable
+    assert be.run_cell(cell)["objectives"] == rec["objectives"]
+    with pytest.raises(ValueError):
+        be.run_cell(CUDACell("xlstm-350m", "train_4k", "h100", 12,
+                             "full", 1))
+
+
+def test_cuda_campaign_resume_and_search_config_rejection(tmp_path):
+    """A stored cell only counts as done under the SAME search config;
+    re-weighting re-runs every cell instead of serving stale mappings."""
+    be = get_backend("cuda")
+    store = tmp_path / "c.jsonl"
+    cells = be.expand_cells(archs=["xlstm-350m"], shapes=["train_4k"],
+                            gpus=[8, 16], gpu_types=("a100-80g",),
+                            remats=("full",), microbatches=(1,))
+    r1 = run_campaign(cells, str(store), backend="cuda")
+    assert r1.new_cells == len(cells) and r1.new_evaluations > 0
+    r2 = run_campaign(cells, str(store), backend="cuda")
+    assert r2.new_cells == 0 and r2.new_evaluations == 0
+    r3 = run_campaign(cells, str(store), backend="cuda",
+                      weights={"watts": 1.0})
+    assert r3.new_cells == len(cells)
+    # pso knobs are irrelevant to the deterministic enumeration
+    r4 = run_campaign(cells, str(store), backend="cuda",
+                      weights={"watts": 1.0}, population=99)
+    assert r4.new_cells == 0
+
+
+def test_cuda_cli_end_to_end(tmp_path, capsys):
+    store = tmp_path / "cuda.jsonl"
+    argv = ["--backend", "cuda", "--archs", "xlstm-350m",
+            "--shapes", "train_4k", "--gpus", "8",
+            "--gpu-types", "a100-80g,h100", "--remats", "full",
+            "--microbatches", "1", "--store", str(store)]
+    report = cli_main(argv)
+    out = capsys.readouterr().out
+    assert "campaign[cuda]" in out and "Pareto frontier" in out
+    assert store.exists()
+    assert ResultStore(store).backends() == ["cuda"]
+    report2 = cli_main(argv)
+    assert report2.new_evaluations == 0
+    assert report2.reused_cells == len(report.cells)
+
+
+# ---------------------------------------------------------------------------
+# normalized cross-backend objectives
+# ---------------------------------------------------------------------------
+
+
+def test_normalized_throughput_helper():
+    n = normalized_throughput(10.0, watts=500.0, usd_per_hour=2.0,
+                              peak_tflops=40.0)
+    assert n["tflops"] == 10.0
+    assert n["tflops_per_watt"] == pytest.approx(0.02)
+    assert n["tflops_per_dollar"] == pytest.approx(5.0)
+    assert n["tflops_per_peak"] == pytest.approx(0.25)
+    assert n["feasible"] is True
+    assert canonical_vector(n, NORMALIZED_OBJECTIVES) == \
+        (10.0, pytest.approx(0.02), pytest.approx(5.0), pytest.approx(0.25))
+    assert scalarize_values({**n, "feasible": False},
+                            NORMALIZED_OBJECTIVES) == 0.0
+
+
+def test_every_backend_normalizes_its_own_records():
+    fpga_rec = {
+        "cell": {"net": "vgg16", "h": 64, "w": 64, "fpga": "ku115",
+                 "precision": 16, "batch_max": 1},
+        "objectives": {"throughput_ips": 100.0, "gops": 2000.0,
+                       "latency_s": 0.01, "dsp_eff": 0.8,
+                       "bram_used": 100.0, "feasible": True},
+    }
+    tpu_rec = {
+        "cell": {"arch": "a", "shape": "s", "chips": 8, "remat": "full",
+                 "microbatches": 1},
+        "objectives": {"step_time_s": 1.0, "mfu": 0.5, "hbm_gib": 4.0,
+                       "chips": 8.0, "feasible": True},
+    }
+    cuda_rec = {
+        "cell": {"arch": "a", "shape": "s", "gpu": "h100", "gpus": 8,
+                 "remat": "full", "microbatches": 1},
+        "objectives": {"step_time_s": 1.0, "mfu": 0.5, "hbm_gib": 4.0,
+                       "gpus": 8.0, "watts": 5600.0, "feasible": True},
+    }
+    for name, rec in (("fpga", fpga_rec), ("tpu", tpu_rec),
+                      ("cuda", cuda_rec)):
+        norm = get_backend(name).normalized(rec)
+        assert set(norm) == {s.name for s in NORMALIZED_OBJECTIVES} | \
+            {"feasible"}
+        assert all(v >= 0 for k, v in norm.items() if k != "feasible")
+    # spot-check the arithmetic against the spec tables
+    assert get_backend("fpga").normalized(fpga_rec)["tflops"] == \
+        pytest.approx(2.0)
+    tpu_norm = get_backend("tpu").normalized(tpu_rec)
+    assert tpu_norm["tflops"] == \
+        pytest.approx(0.5 * 8 * TPU_V5E.peak_flops / 1e12)
+    assert tpu_norm["tflops_per_peak"] == pytest.approx(0.5)  # == MFU
+    cuda_norm = get_backend("cuda").normalized(cuda_rec)
+    assert cuda_norm["tflops_per_watt"] == \
+        pytest.approx(0.5 * 8 * H100.peak_flops / 1e12 / 5600.0)
+
+
+def test_normalized_frontier_compares_across_backends():
+    """Records from different backends land on ONE frontier in
+    normalized units."""
+    recs = [get_backend("tpu").run_cell(c) for c in
+            get_backend("tpu").expand_cells(archs=["xlstm-350m"],
+                                            shapes=["train_4k"], chips=[8],
+                                            remats=("full",),
+                                            microbatches=(1,))]
+    recs += [get_backend("cuda").run_cell(c) for c in
+             get_backend("cuda").expand_cells(archs=["xlstm-350m"],
+                                              shapes=["train_4k"], gpus=[8],
+                                              gpu_types=("a100-80g", "h100"),
+                                              remats=("full",),
+                                              microbatches=(1,))]
+    norms = [get_backend(r["backend"]).normalized(r) for r in recs]
+    vecs = [canonical_vector(n, NORMALIZED_OBJECTIVES) for n in norms]
+    front = diverse_front(vecs)
+    assert front  # one comparable frontier exists
+    assert len({recs[i]["backend"] for i in range(len(recs))}) == 2
+
+
+# ---------------------------------------------------------------------------
+# report: cross-backend section + compare mode
+# ---------------------------------------------------------------------------
+
+
+def _mini_stores(tmp_path):
+    tpu_store = tmp_path / "tpu.jsonl"
+    cuda_store = tmp_path / "cuda.jsonl"
+    be_t, be_c = get_backend("tpu"), get_backend("cuda")
+    run_campaign(be_t.expand_cells(archs=["xlstm-350m"], shapes=["train_4k"],
+                                   chips=[8], remats=("full",),
+                                   microbatches=(1,)),
+                 str(tpu_store), backend="tpu")
+    run_campaign(be_c.expand_cells(archs=["xlstm-350m"], shapes=["train_4k"],
+                                   gpus=[8], gpu_types=("a100-80g", "h100"),
+                                   remats=("full",), microbatches=(1,)),
+                 str(cuda_store), backend="cuda")
+    return tpu_store, cuda_store
+
+
+def test_mixed_store_report_gets_cross_backend_section(tmp_path):
+    tpu_store, cuda_store = _mini_stores(tmp_path)
+    mixed = [*ResultStore(tpu_store).records(),
+             *ResultStore(cuda_store).records()]
+    md = render_report(mixed)
+    assert "## Cross-backend frontier (normalized objectives)" in md
+    assert "### Backend champions" in md
+    assert "`tflops`" in md
+    # single-backend stores do NOT get the section
+    md_single = render_report(ResultStore(tpu_store).records())
+    assert "Cross-backend frontier" not in md_single
+
+
+def test_render_compare_winner_deltas_and_trajectories(tmp_path):
+    tpu_store, cuda_store = _mini_stores(tmp_path)
+    md = render_compare([("tpu", ResultStore(tpu_store).records()),
+                         ("cuda", ResultStore(cuda_store).records())])
+    assert "## Per-workload winner deltas" in md
+    assert "## Objective trajectories" in md
+    assert "## Cross-backend frontier (normalized objectives)" in md
+    # the shared workload appears with a winner column filled in
+    assert "xlstm-350m/train_4k" in md
+    assert "| winner |" not in md.split("Per-workload winner deltas")[0]
+    with pytest.raises(ValueError):
+        render_compare([("only", ResultStore(tpu_store).records())])
+
+
+def test_report_compare_cli(tmp_path):
+    from repro.dse.report import main as report_main
+    tpu_store, cuda_store = _mini_stores(tmp_path)
+    out = tmp_path / "cmp.md"
+    rc = report_main(["--compare", str(tpu_store), str(cuda_store),
+                      "--out", str(out)])
+    assert rc == 0
+    md = out.read_text()
+    for section in ("Per-workload winner deltas", "Objective trajectories",
+                    "Cross-backend frontier"):
+        assert section in md
+
+
+def test_backend_registry_includes_cuda():
+    assert "cuda" in BACKENDS
+    assert BACKENDS["cuda"].objective_names() == (
+        "step_time_s", "mfu", "hbm_gib", "gpus", "watts")

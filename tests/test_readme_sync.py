@@ -1,0 +1,47 @@
+"""The README quickstart block and the ``repro.dse`` docstring quickstart
+are verbatim copies by design (ROADMAP); this enforces it."""
+from pathlib import Path
+
+import repro.dse
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _readme_quickstart() -> str:
+    text = (ROOT / "README.md").read_text()
+    assert "## DSE campaign quickstarts" in text, \
+        "README lost its quickstart section"
+    section = text.split("## DSE campaign quickstarts", 1)[1]
+    assert "```console\n" in section, "quickstart code fence missing"
+    return section.split("```console\n", 1)[1].split("```", 1)[0].strip("\n")
+
+
+def _docstring_quickstart() -> str:
+    doc = repro.dse.__doc__
+    assert "Quickstart" in doc
+    block = doc.split("::\n", 1)[1]
+    # dedent the 4-space literal block; stop at the docstring's end
+    lines = []
+    for line in block.splitlines():
+        if line.startswith("    "):
+            lines.append(line[4:])
+        elif not line.strip():
+            lines.append("")
+        else:  # pragma: no cover - text after the block would end it
+            break
+    return "\n".join(lines).strip("\n")
+
+
+def test_readme_quickstart_matches_dse_docstring():
+    readme, doc = _readme_quickstart(), _docstring_quickstart()
+    assert readme == doc, (
+        "README quickstart and repro/dse/__init__.py docstring quickstart "
+        "have drifted; they are verbatim copies by design:\n"
+        f"--- README ---\n{readme}\n--- docstring ---\n{doc}")
+
+
+def test_quickstart_covers_all_backends_and_compare():
+    block = _readme_quickstart()
+    for needle in ("--backend tpu", "--backend cuda", "repro.dse.report",
+                   "--compare"):
+        assert needle in block

@@ -1,6 +1,5 @@
 """Serving subsystem: continuous batcher, int8 weight quantization, and
 the hybrid LM execution plan."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -4,7 +4,6 @@ import subprocess
 import sys
 
 import jax
-import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
