@@ -246,6 +246,52 @@ def bench_cuda_campaign() -> list[dict]:
                     f"resume_evals={rerun.new_evaluations}")}]
 
 
+def bench_placement() -> list[dict]:
+    """repro.dse.placement: tpu+cuda campaigns pooled into one store, then
+    a budgeted multi-workload placement — campaign wall time, solve time
+    for both solvers, and whether greedy matched the exact optimum."""
+    import tempfile
+
+    from repro.core.hw_specs import CostEnvelope
+    from repro.dse import run_campaign
+    from repro.dse.backends import get_backend
+    from repro.dse.placement import place, pooled_records
+    from repro.dse.store import ResultStore
+
+    archs = ["starcoder2-3b", "xlstm-350m"]
+    shapes = ["train_4k", "decode_32k"]
+    with tempfile.TemporaryDirectory() as td:
+        store = f"{td}/bench_place.jsonl"
+        tpu_cells = get_backend("tpu").expand_cells(
+            archs=archs, shapes=shapes, chips=[8, 16],
+            remats=("full",), microbatches=(1,))
+        cuda_cells = get_backend("cuda").expand_cells(
+            archs=archs, shapes=shapes, gpus=[8, 16],
+            gpu_types=("a100-80g", "h100"), remats=("full",),
+            microbatches=(1,))
+        _, us_tpu = _timed(run_campaign, tpu_cells, store, backend="tpu")
+        _, us_cuda = _timed(run_campaign, cuda_cells, store, backend="cuda")
+        records = pooled_records([ResultStore(store)])
+        workloads = [f"{a}/{s}" for a in archs for s in shapes]
+        budget = CostEnvelope(usd_per_hour=150.0, watts=40000.0)
+        exact, us_exact = _timed(place, workloads, records, budget,
+                                 solver="exact")
+        greedy, us_greedy = _timed(place, workloads, records, budget,
+                                   solver="greedy")
+        agree = [a.candidate.cell_key for a in exact.assignments] == \
+            [a.candidate.cell_key for a in greedy.assignments]
+    return [{
+        "name": f"dse_placement_{len(workloads)}workloads",
+        "us_per_call": us_tpu + us_cuda + us_exact,
+        "derived": (f"cells={len(tpu_cells) + len(cuda_cells)};"
+                    f"value={exact.total_value:.1f};"
+                    f"usd={exact.total_usd:.2f};"
+                    f"exact_nodes={exact.explored};"
+                    f"solve_us={us_exact:.0f};"
+                    f"greedy_us={us_greedy:.0f};"
+                    f"greedy_matches_exact={agree}")}]
+
+
 BENCHES = {
     "fig1": bench_fig1_ctc,
     "table1": bench_table1_variance,
@@ -257,6 +303,7 @@ BENCHES = {
     "campaign": bench_dse_campaign,
     "campaign_tpu": bench_tpu_campaign,
     "campaign_cuda": bench_cuda_campaign,
+    "campaign_placement": bench_placement,
     "roofline": bench_roofline,
 }
 

@@ -1,0 +1,59 @@
+"""Relative-link checker for the docs set (the CI docs job runs this).
+
+Walks every Markdown file under ``docs/`` (plus the top-level README)
+and verifies that each relative link target exists on disk. External
+(``http``/``mailto``) links and intra-page ``#fragment`` links are out
+of scope — this guards the cheap, common breakage: a renamed file or a
+report that was never regenerated.
+
+    python docs/check_links.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+#: inline links ``[text](target)``; images share the syntax.
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def doc_files() -> list[Path]:
+    return sorted((ROOT / "docs").rglob("*.md")) + [ROOT / "README.md"]
+
+
+def broken_links(path: Path) -> list[tuple[int, str]]:
+    out = []
+    for lineno, line in enumerate(path.read_text().splitlines(), 1):
+        for target in _LINK.findall(line):
+            if target.startswith(_SKIP_PREFIXES):
+                continue
+            rel = target.split("#", 1)[0]  # file part only
+            if not rel:
+                continue
+            if not (path.parent / rel).exists():
+                out.append((lineno, target))
+    return out
+
+
+def main() -> int:
+    bad = 0
+    files = doc_files()
+    for path in files:
+        for lineno, target in broken_links(path):
+            print(f"{path.relative_to(ROOT)}:{lineno}: broken relative "
+                  f"link -> {target}", file=sys.stderr)
+            bad += 1
+    if bad:
+        print(f"FAIL: {bad} broken link(s)", file=sys.stderr)
+        return 1
+    print(f"OK: all relative links resolve across {len(files)} file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,92 @@
+"""Walkthrough: cost-aware multi-family placement with repro.dse.placement.
+
+Runs two small campaigns (TPU and CUDA) for the same two workloads into
+ONE store, then answers the end-to-end question the campaigns alone
+don't: *which family, part, and count should each workload run on,
+under a joint dollar/watt budget?*
+
+1. build campaign evidence: tpu + cuda sweeps of two workloads,
+2. place the mix under a loose budget (the best designs win outright),
+3. tighten the budget and watch the assignment trade down — and the
+   marginal "next dollar / next watt" table say exactly what a budget
+   raise would buy,
+4. demonstrate the coverage fallback: a workload no store covers gets
+   fresh default-campaign evaluations before placing,
+5. write the Markdown placement report.
+
+    PYTHONPATH=src python examples/placement.py
+"""
+from repro.core.hw_specs import CostEnvelope
+from repro.dse import run_campaign
+from repro.dse.backends import get_backend
+from repro.dse.placement import (candidates_by_workload, ensure_coverage,
+                                 place, pooled_records)
+from repro.dse.report import render_placement
+from repro.dse.store import ResultStore
+
+
+def show(result):
+    unit = "TFLOP/s" if result.objective.startswith("tflops") else ""
+    for a in result.assignments:
+        c = a.candidate
+        print(f"  {a.workload:<28} -> {c.backend}:{c.part} x{c.count} "
+              f"[{c.point}]  {c.value:.4g} {unit} "
+              f"(${c.usd_per_hour:g}/h, {c.watts:g} W)")
+    print(f"  total {result.total_value:.4g} {unit} for "
+          f"${result.total_usd:g}/h, {result.total_watts:g} W")
+    for s in result.suggestions[:2]:
+        print(f"  next: {s.workload} could gain +{s.gain:.4g} {unit} for "
+              f"+${s.d_usd:g}/h / +{s.d_watts:g} W "
+              f"(blocked by {', '.join(s.blocked_by)})")
+
+
+def main():
+    store_path = "results/placement_example.jsonl"
+    archs, shapes = ["starcoder2-3b", "xlstm-350m"], ["train_4k"]
+    workloads = [f"{a}/{s}" for a in archs for s in shapes]
+
+    # 1. campaign evidence: both families sweep the same workloads.
+    tpu, cuda = get_backend("tpu"), get_backend("cuda")
+    run_campaign(tpu.expand_cells(archs=archs, shapes=shapes, chips=[8, 16],
+                                  remats=("full",), microbatches=(1,)),
+                 store_path, backend="tpu")
+    run_campaign(cuda.expand_cells(archs=archs, shapes=shapes, gpus=[8, 16],
+                                   gpu_types=("a100-80g", "h100"),
+                                   remats=("full",), microbatches=(1,)),
+                 store_path, backend="cuda")
+    records = pooled_records([ResultStore(store_path)])
+    print(f"== store: {len(records)} cells across tpu+cuda ==")
+
+    # 2. loose budget: every workload gets its best design.
+    loose = place(workloads, records, CostEnvelope(usd_per_hour=200.0))
+    print(f"\n== placement under $200/h ({loose.solver}) ==")
+    show(loose)
+
+    # 3. tight budget: the solver trades down, and the marginal table
+    #    quantifies what the next dollar would buy.
+    tight = place(workloads, records,
+                  CostEnvelope(usd_per_hour=60.0, watts=8000.0))
+    print(f"\n== placement under $60/h and 8 kW ({tight.solver}) ==")
+    show(tight)
+
+    # 4. coverage fallback: decode_32k was never swept — fill it with the
+    #    backends' default coverage cells, then place the widened mix.
+    wider = workloads + ["xlstm-350m/decode_32k"]
+    store = ResultStore(store_path)
+    known = candidates_by_workload(store.records(), "tflops")
+    filled = ensure_coverage(wider, store, known)
+    print(f"\n== coverage fallback evaluated: {filled} ==")
+    full = place(wider, pooled_records([store]),
+                 CostEnvelope(usd_per_hour=250.0))
+    show(full)
+
+    # 5. the Markdown report (assignment, utilization, marginal upgrades).
+    out = "results/placement_example_report.md"
+    with open(out, "w") as f:
+        f.write(render_placement(tight, title="placement.py example"))
+    print(f"\nreport -> {out}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,62 @@ from __future__ import annotations
 
 import dataclasses
 
+
+# ---------------------------------------------------------------------------
+# Budget metadata (shared by repro.dse.placement)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CostEnvelope:
+    """A placement budget: joint caps on the hourly dollar proxy and on
+    board power. ``None`` leaves that axis uncapped. The dollar/watt
+    terms come from the per-part ``usd_per_hour``/``tdp_watts`` fields
+    below, so a budget is expressed in the same (deliberately coarse)
+    units the normalized objectives already use."""
+
+    usd_per_hour: float | None = None
+    watts: float | None = None
+
+    #: Relative slack when testing a cost against a cap, so float sums
+    #: that are *exactly* at budget don't flap infeasible.
+    _REL_EPS = 1e-9
+
+    def admits(self, usd_per_hour: float, watts: float) -> bool:
+        """True iff a (dollars/hour, watts) total fits under both caps."""
+        if self.usd_per_hour is not None and \
+                usd_per_hour > self.usd_per_hour * (1 + self._REL_EPS):
+            return False
+        if self.watts is not None and \
+                watts > self.watts * (1 + self._REL_EPS):
+            return False
+        return True
+
+    def capped_axes(self) -> tuple[str, ...]:
+        """The budgeted axis names, in (dollars, watts) order."""
+        out = []
+        if self.usd_per_hour is not None:
+            out.append("usd_per_hour")
+        if self.watts is not None:
+            out.append("watts")
+        return tuple(out)
+
+    def describe(self) -> str:
+        parts = []
+        if self.usd_per_hour is not None:
+            parts.append(f"${self.usd_per_hour:g}/h")
+        if self.watts is not None:
+            parts.append(f"{self.watts:g} W")
+        return " and ".join(parts) if parts else "unbounded"
+
+
+def pod_cost(spec, count: int = 1) -> tuple[float, float]:
+    """(watts, usd_per_hour) of ``count`` instances of one part. Works for
+    any spec class below — they all carry ``tdp_watts``/``usd_per_hour``
+    — so placement costs FPGAs, TPU pods, and GPU pods the same way."""
+    return count * spec.tdp_watts, count * spec.usd_per_hour
+
+
 # ---------------------------------------------------------------------------
 # FPGA (faithful reproduction domain)
 # ---------------------------------------------------------------------------

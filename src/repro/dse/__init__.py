@@ -84,11 +84,19 @@ _CAMPAIGN_EXPORTS = ("CampaignCell", "CampaignReport", "cell_seed",
                      "expand_cells", "run_campaign", "run_cell")
 _BACKEND_EXPORTS = ("BACKENDS", "Backend", "CUDABackend", "CUDACell",
                     "FPGABackend", "GPU_OBJECTIVES", "TPUBackend",
-                    "TPUCell", "TPU_OBJECTIVES", "get_backend")
-_REPORT_EXPORTS = ("fixture_records", "render_compare", "render_report")
+                    "TPUCell", "TPU_OBJECTIVES", "get_backend",
+                    "workload_families")
+_REPORT_EXPORTS = ("fixture_records", "render_compare", "render_placement",
+                   "render_report")
+_PLACEMENT_EXPORTS = ("Assignment", "BudgetInfeasibleError", "Candidate",
+                      "CoverageError", "PlacementError", "PlacementResult",
+                      "candidates_by_workload", "ensure_coverage",
+                      "marginal_upgrades", "parse_workloads", "place",
+                      "pooled_records", "prune_candidates")
 
 __all__ = [
     *_CAMPAIGN_EXPORTS, *_BACKEND_EXPORTS, *_REPORT_EXPORTS,
+    *_PLACEMENT_EXPORTS,
     "NORMALIZED_DEFAULT_WEIGHTS", "NORMALIZED_OBJECTIVES",
     "OBJECTIVES", "ObjectiveSpec", "Objectives", "canonical_vector",
     "normalized_throughput", "scalarize_values", "scalarized_objective",
@@ -108,4 +116,7 @@ def __getattr__(name: str):
     if name in _REPORT_EXPORTS:
         from . import report
         return getattr(report, name)
+    if name in _PLACEMENT_EXPORTS:
+        from . import placement
+        return getattr(placement, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -59,7 +59,7 @@ from typing import Mapping, Sequence
 
 from repro.configs import ARCH_IDS, SHAPES, cell_enabled, get_config
 from repro.core import gpu_planner
-from repro.core.hw_specs import FPGAS, GPUS, TPU_V5E, alpha_for
+from repro.core.hw_specs import FPGAS, GPUS, TPU_V5E, alpha_for, pod_cost
 from repro.core.netinfo import TABLE1_NETS
 from repro.core.tpu_planner import evaluate_point, factorizations
 
@@ -173,7 +173,31 @@ class Backend(abc.ABC):
 
     @abc.abstractmethod
     def group_key(self, rec: dict) -> str:
-        """Workload grouping for per-cell-winner report tables."""
+        """Workload grouping for per-cell-winner report tables. Also the
+        *workload key* :mod:`repro.dse.placement` matches candidates on —
+        the TPU and CUDA backends share the ``arch/shape`` key space on
+        purpose, so one workload can be hosted by either family."""
+
+    # -- placement hooks (repro.dse.placement) -------------------------------
+
+    @abc.abstractmethod
+    def record_cost(self, rec: Mapping) -> tuple[float, float]:
+        """(watts, usd_per_hour) of the hardware a stored design occupies,
+        from the ``hw_specs`` TDP/$ tables — the budget currency of
+        :mod:`repro.dse.placement`."""
+
+    @abc.abstractmethod
+    def placement_point(self, rec: Mapping) -> dict:
+        """``{part, count, point}`` describing the assigned hardware: the
+        named part, how many of it, and the intra-cell design point the
+        search picked (FPGA: the RAV split; TPU/CUDA: the dp x tp mesh)."""
+
+    @abc.abstractmethod
+    def coverage_cells(self, workload_key: str) -> list:
+        """Default campaign cells for ONE workload key (the coverage-query
+        hook): when a placement store has no candidates for a workload,
+        these cells are what :mod:`repro.dse.placement` evaluates to fill
+        the gap. Returns [] for keys this backend cannot host."""
 
     @abc.abstractmethod
     def table_header(self) -> str: ...
@@ -238,6 +262,27 @@ class FPGABackend(Backend):
         return normalized_throughput(o["gops"] / 1e3, hw.tdp_watts,
                                      hw.usd_per_hour, peak_tflops,
                                      feasible=o.get("feasible", True))
+
+    def record_cost(self, rec: Mapping) -> tuple[float, float]:
+        """One board per design — the paper's accelerators are single-FPGA."""
+        return pod_cost(FPGAS[rec["cell"]["fpga"]])
+
+    def placement_point(self, rec: Mapping) -> dict:
+        r = rec["rav"]
+        return {"part": rec["cell"]["fpga"], "count": 1,
+                "point": f"sp={r['sp']},b={r['batch']}"}
+
+    def coverage_cells(self, workload_key: str) -> list:
+        """``net@HxW`` / ``net@native`` -> one cell per FPGA part at the
+        paper's default precision and batch cap."""
+        from .campaign import RESIZABLE_NETS
+        net, _, size = workload_key.partition("@")
+        if net not in RESIZABLE_NETS and net not in TABLE1_NETS:
+            return []
+        inputs = [(0, 0)] if size in ("native", "") else parse_inputs(size)
+        return self.expand_cells(nets=[net], inputs=inputs,
+                                 fpgas=sorted(FPGAS), precisions=[16],
+                                 batch_caps=[1])
 
     def headline(self, rec: dict) -> str:
         return f"{rec['objectives']['gops']:.1f} GOP/s"
@@ -308,6 +353,34 @@ def add_workload_arguments(ap) -> None:
               help="comma list of remat policies (train shapes)")
     _add_once(g, "--microbatches", default="1,2,4",
               help="comma list of microbatch counts (train shapes)")
+
+
+#: Device-count budgets swept when placement must fill store coverage for
+#: a workload (the tpu/cuda ``coverage_cells`` default axis).
+PLACEMENT_COUNTS: tuple[int, ...] = (8, 16, 32)
+
+
+def _arch_shape(workload_key: str) -> tuple[str, str] | None:
+    """``arch/shape`` workload key -> (arch, shape), or None if the key
+    isn't in the tpu/cuda key space (both families share it by design)."""
+    arch, sep, shape = workload_key.partition("/")
+    if not sep or arch not in ARCH_IDS or shape not in SHAPES:
+        return None
+    return arch, shape
+
+
+def workload_families(workload_key: str) -> tuple[str, ...]:
+    """Which device families can host a workload key: ``arch/shape`` keys
+    are shared by the tpu AND cuda backends (that overlap is what lets
+    :mod:`repro.dse.placement` choose a family per workload); ``net@size``
+    keys belong to the fpga backend. Unknown keys return ()."""
+    if _arch_shape(workload_key) is not None:
+        return ("tpu", "cuda")
+    from .campaign import RESIZABLE_NETS
+    net = workload_key.partition("@")[0]
+    if net in RESIZABLE_NETS or net in TABLE1_NETS:
+        return ("fpga",)
+    return ()
 
 
 # ---------------------------------------------------------------------------
@@ -473,6 +546,23 @@ class TPUBackend(Backend):
                                      chips * hw.tdp_watts,
                                      chips * hw.usd_per_hour, peak_tflops,
                                      feasible=o.get("feasible", True))
+
+    def record_cost(self, rec: Mapping) -> tuple[float, float]:
+        return pod_cost(TPU_V5E, int(rec["objectives"]["chips"]))
+
+    def placement_point(self, rec: Mapping) -> dict:
+        p = rec["plan"]
+        return {"part": TPU_V5E.name, "count": int(rec["objectives"]["chips"]),
+                "point": f"dp{p['dp']}xtp{p['tp']}"}
+
+    def coverage_cells(self, workload_key: str) -> list:
+        """``arch/shape`` -> that workload at every default chip budget."""
+        parsed = _arch_shape(workload_key)
+        if parsed is None:
+            return []
+        arch, shape = parsed
+        return self.expand_cells(archs=[arch], shapes=[shape],
+                                 chips=PLACEMENT_COUNTS)
 
     def headline(self, rec: dict) -> str:
         o = rec["objectives"]
@@ -679,6 +769,27 @@ class CUDABackend(Backend):
         return normalized_throughput(o["mfu"] * peak_tflops, o["watts"],
                                      n * hw.usd_per_hour, peak_tflops,
                                      feasible=o.get("feasible", True))
+
+    def record_cost(self, rec: Mapping) -> tuple[float, float]:
+        return pod_cost(GPUS[rec["cell"]["gpu"]],
+                        int(rec["objectives"]["gpus"]))
+
+    def placement_point(self, rec: Mapping) -> dict:
+        p = rec["plan"]
+        return {"part": rec["cell"]["gpu"],
+                "count": int(rec["objectives"]["gpus"]),
+                "point": f"dp{p['dp']}xtp{p['tp']}"}
+
+    def coverage_cells(self, workload_key: str) -> list:
+        """``arch/shape`` -> that workload at every default GPU-count
+        budget, across every part in the GPU table."""
+        parsed = _arch_shape(workload_key)
+        if parsed is None:
+            return []
+        arch, shape = parsed
+        return self.expand_cells(archs=[arch], shapes=[shape],
+                                 gpus=PLACEMENT_COUNTS,
+                                 gpu_types=tuple(sorted(GPUS)))
 
     def headline(self, rec: dict) -> str:
         o = rec["objectives"]

@@ -326,6 +326,79 @@ def render_compare(stores: Sequence[tuple[str, Sequence[Mapping]]], *,
     return "\n".join(lines).rstrip() + "\n"
 
 
+# ---------------------------------------------------------------------------
+# placement report (repro.dse.placement results)
+# ---------------------------------------------------------------------------
+
+
+def placement_section(result) -> list[str]:
+    """Markdown section for a :class:`repro.dse.placement.PlacementResult`:
+    the per-workload assignment table ({family, part, count, design
+    point}), budget utilization per capped axis, and the marginal
+    "next dollar / next watt" upgrade table."""
+    unit = {s.name: s.units for s in NORMALIZED_OBJECTIVES}[result.objective]
+    lines = [
+        f"{len(result.assignments)} workload(s) placed by the "
+        f"`{result.solver}` solver ({result.explored} points examined), "
+        f"maximizing `{result.objective}` ({unit}) under a budget of "
+        f"{result.budget.describe()}. Candidate designs per workload "
+        f"(raw -> cost-dominance-pruned): "
+        + ", ".join(f"{w} {raw}->{kept}"
+                    for w, (raw, kept) in sorted(result.options.items()))
+        + ".", ""]
+
+    lines += ["## Assignment", ""]
+    cols = ["workload", "family", "part", "count", "design point", "cell",
+            f"{result.objective} ({unit})", "$/h", "W"]
+    rows = []
+    for a in result.assignments:
+        c = a.candidate
+        rows.append([a.workload, f"`{c.backend}`", c.part, c.count,
+                     f"`{c.point}`", f"`{c.cell_key}`", c.value,
+                     c.usd_per_hour, c.watts])
+    rows.append(["**total**", "", "", "", "", "", result.total_value,
+                 result.total_usd, result.total_watts])
+    lines += _table(cols, rows)
+    lines += [""]
+
+    lines += ["## Budget utilization", ""]
+    rows = []
+    for axis, label in (("usd_per_hour", "dollars ($/h)"),
+                        ("watts", "power (W)")):
+        used, cap = result.utilization()[axis]
+        rows.append([label, used, f"{cap:g}" if cap is not None else "—",
+                     f"{used / cap:.0%}" if cap else "—"])
+    lines += _table(["axis", "used", "cap", "utilization"], rows)
+    lines += [""]
+
+    lines += ["## Marginal upgrades (next dollar / next watt)", ""]
+    if not result.suggestions:
+        lines += ["_Every value-raising upgrade already fits in the "
+                  "budget — raising it would not change this "
+                  "assignment._", ""]
+        return lines
+    lines += ["Best rejected upgrade per workload — the cheapest budget "
+              "raise that would change the answer:", ""]
+    rows = []
+    for s in result.suggestions:
+        rows.append([s.workload, f"`{s.candidate.cell_key}`",
+                     f"+{_fmt(s.gain)}", f"{s.d_usd:+.4g}",
+                     f"{s.d_watts:+.4g}",
+                     ", ".join(s.blocked_by) or "budget"])
+    lines += _table(["workload", "upgrade to", f"+{result.objective}",
+                     "+$/h", "+W", "blocked by"], rows)
+    lines += [""]
+    return lines
+
+
+def render_placement(result, *, title: str | None = None) -> str:
+    """A full Markdown placement report (one section per concern)."""
+    title = title or (f"Placement — {len(result.assignments)} workload(s) "
+                      f"under {result.budget.describe()}")
+    lines = [f"# {title}", ""] + placement_section(result)
+    return "\n".join(lines).rstrip() + "\n"
+
+
 def _bench_section(bench: Mapping) -> list[str]:
     lines = ["## Benchmark appendix (`benchmarks/run.py --json`)", ""]
     for name in sorted(bench.get("benchmarks", {})):

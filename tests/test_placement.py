@@ -1,0 +1,354 @@
+"""Tests for the cost-aware multi-family placement engine
+(repro.dse.placement): workload parsing, candidate costing/pruning,
+solver correctness + determinism, budget/coverage diagnostics,
+mixed-store pooling and resume safety, and the committed docs example."""
+import copy
+from pathlib import Path
+
+import pytest
+
+from repro.core.hw_specs import FPGAS, GPUS, TPU_V5E, CostEnvelope, pod_cost
+from repro.dse import run_campaign
+from repro.dse.backends import get_backend, workload_families
+from repro.dse.placement import (BudgetInfeasibleError, CoverageError,
+                                 candidates_by_workload, ensure_coverage,
+                                 normalize_workload, parse_workloads, place,
+                                 pooled_records, prune_candidates)
+from repro.dse.placement import main as placement_main
+from repro.dse.report import fixture_records, render_placement
+from repro.dse.store import ResultStore
+
+ROOT = Path(__file__).resolve().parents[1]
+
+WORKLOADS = ["starcoder2-3b/train_4k", "xlstm-350m/decode_32k",
+             "vgg16@224x224"]
+BUDGET = CostEnvelope(usd_per_hour=60.0, watts=25000.0)
+
+
+# ---------------------------------------------------------------------------
+# workload keys
+# ---------------------------------------------------------------------------
+
+
+def test_normalize_workload_forms():
+    assert normalize_workload("starcoder2-3b/train_4k") == \
+        "starcoder2-3b/train_4k"
+    assert normalize_workload("vgg16@224") == "vgg16@224x224"
+    assert normalize_workload("vgg16@320x480") == "vgg16@320x480"
+    assert normalize_workload("alexnet") == "alexnet@native"
+    assert normalize_workload("alexnet@native") == "alexnet@native"
+
+
+def test_normalize_workload_rejects_unknown():
+    with pytest.raises(KeyError):
+        normalize_workload("nonexistent-net@224")
+    with pytest.raises(KeyError):
+        normalize_workload("starcoder2-3b/not_a_shape")
+    with pytest.raises(KeyError):
+        normalize_workload("vgg16@huge")
+
+
+def test_normalize_workload_rejects_sized_fixed_net():
+    """Fixed-topology nets record as @native; an explicit size would
+    build a key no record can ever match, so reject it loudly."""
+    with pytest.raises(KeyError, match="fixed input topology"):
+        normalize_workload("alexnet@224")
+    with pytest.raises(KeyError, match="fixed input topology"):
+        normalize_workload("alexnet@224x224")
+
+
+def test_parse_workloads_dedupes_in_order():
+    keys = parse_workloads("vgg16@224, vgg16@224x224, alexnet")
+    assert keys == ["vgg16@224x224", "alexnet@native"]
+    with pytest.raises(KeyError):
+        parse_workloads(" , ")
+
+
+def test_workload_families_overlap_is_the_point():
+    assert workload_families("starcoder2-3b/train_4k") == ("tpu", "cuda")
+    assert workload_families("vgg16@224x224") == ("fpga",)
+    assert workload_families("no-such-thing") == ()
+
+
+# ---------------------------------------------------------------------------
+# candidates: costing and pruning
+# ---------------------------------------------------------------------------
+
+
+def test_candidate_costs_follow_hw_tables():
+    cands = candidates_by_workload(fixture_records(), "tflops")
+    by_key = {c.cell_key: c for cs in cands.values() for c in cs}
+    tpu16 = by_key["arch=starcoder2-3b|shape=train_4k|chips=16"
+                   "|remat=full|mb=2"]
+    assert (tpu16.watts, tpu16.usd_per_hour) == pod_cost(TPU_V5E, 16)
+    h100 = by_key["arch=starcoder2-3b|shape=train_4k|gpu=h100|gpus=8"
+                  "|remat=full|mb=2"]
+    assert (h100.watts, h100.usd_per_hour) == pod_cost(GPUS["h100"], 8)
+    ku = by_key["net=vgg16|in=224x224|fpga=ku115|prec=16|bmax=1"]
+    assert (ku.watts, ku.usd_per_hour) == pod_cost(FPGAS["ku115"])
+    assert ku.count == 1 and h100.count == 8 and tpu16.count == 16
+
+
+def test_infeasible_records_are_not_candidates():
+    cands = candidates_by_workload(fixture_records(), "tflops")
+    keys = {c.cell_key for cs in cands.values() for c in cs}
+    # the fixture marks this tpu cell infeasible (HBM blowout)
+    assert "arch=starcoder2-3b|shape=train_4k|chips=16|remat=none|mb=2" \
+        not in keys
+
+
+def test_prune_drops_cost_dominated_designs():
+    cands = candidates_by_workload(fixture_records(), "tflops")
+    sc2 = cands["starcoder2-3b/train_4k"]
+    kept = prune_candidates(sc2, BUDGET)
+    kept_keys = {c.cell_key for c in kept}
+    # the a100-80g design is beaten on value by the cheaper tpu16 cell
+    assert "arch=starcoder2-3b|shape=train_4k|gpu=a100-80g|gpus=8" \
+        "|remat=full|mb=2" not in kept_keys
+    assert len(kept) < len(sc2)
+    # with no caps, only the best-value design survives
+    best_only = prune_candidates(sc2, CostEnvelope())
+    assert len(best_only) == 1
+    assert best_only[0].value == max(c.value for c in sc2)
+
+
+# ---------------------------------------------------------------------------
+# solving: optimality, determinism, tie-breaking
+# ---------------------------------------------------------------------------
+
+
+def _picks(result):
+    return [(a.workload, a.candidate.cell_key) for a in result.assignments]
+
+
+def test_exact_respects_budget_and_beats_nothing_greedy_found():
+    exact = place(WORKLOADS, fixture_records(), BUDGET, solver="exact")
+    greedy = place(WORKLOADS, fixture_records(), BUDGET, solver="greedy")
+    assert BUDGET.admits(exact.total_usd, exact.total_watts)
+    assert BUDGET.admits(greedy.total_usd, greedy.total_watts)
+    assert exact.total_value >= greedy.total_value - 1e-12
+    # on the fixture the greedy heuristic finds the optimum
+    assert _picks(exact) == _picks(greedy)
+    # the $60 cap forces the tpu pod over the h100 pod for starcoder2
+    assert _picks(exact)[0] == (
+        "starcoder2-3b/train_4k",
+        "arch=starcoder2-3b|shape=train_4k|chips=16|remat=full|mb=2")
+
+
+def test_loose_budget_takes_the_best_designs():
+    loose = place(WORKLOADS, fixture_records(), CostEnvelope())
+    by_wl = dict(_picks(loose))
+    assert by_wl["starcoder2-3b/train_4k"] == \
+        "arch=starcoder2-3b|shape=train_4k|gpu=h100|gpus=8|remat=full|mb=2"
+
+
+def test_placement_is_deterministic_across_runs_and_orders():
+    a = place(WORKLOADS, fixture_records(), BUDGET)
+    b = place(WORKLOADS, fixture_records(), BUDGET)
+    assert _picks(a) == _picks(b)
+    assert [(s.workload, s.candidate.cell_key, s.blocked_by)
+            for s in a.suggestions] == \
+        [(s.workload, s.candidate.cell_key, s.blocked_by)
+         for s in b.suggestions]
+    # record order must not matter
+    c = place(WORKLOADS, list(reversed(fixture_records())), BUDGET)
+    assert _picks(a) == _picks(c)
+
+
+def _tpu_rec(cell_key_suffix, mfu, chips=8):
+    return {
+        "schema": 1, "backend": "tpu",
+        "cell_key": f"arch=xlstm-350m|shape=train_4k|{cell_key_suffix}",
+        "cell": {"arch": "xlstm-350m", "shape": "train_4k", "chips": chips,
+                 "remat": "full", "microbatches": 1},
+        "plan": {"dp": chips, "tp": 1, "bound": "compute"},
+        "objectives": {"step_time_s": 1.0, "mfu": mfu, "hbm_gib": 1.0,
+                       "chips": float(chips), "feasible": True},
+        "search": {"weights": None}, "evaluations": 1,
+    }
+
+
+def test_exact_ties_break_to_smaller_cell_key():
+    # two candidates with IDENTICAL value and cost: the lexicographically
+    # smaller cell key must win, for both solvers, in either input order
+    recs = [_tpu_rec("chips=8|remat=full|mb=9", 0.5),
+            _tpu_rec("chips=8|remat=full|mb=1", 0.5)]
+    want = recs[1]["cell_key"]
+    for solver in ("exact", "greedy"):
+        for order in (recs, list(reversed(recs))):
+            res = place(["xlstm-350m/train_4k"], order,
+                        CostEnvelope(usd_per_hour=100.0), solver=solver)
+            assert res.assignments[0].candidate.cell_key == want, solver
+
+
+def _cuda_rec(gpu, gpus, mfu):
+    return {
+        "schema": 1, "backend": "cuda",
+        "cell_key": (f"arch=xlstm-350m|shape=train_4k|gpu={gpu}"
+                     f"|gpus={gpus}|remat=full|mb=1"),
+        "cell": {"arch": "xlstm-350m", "shape": "train_4k", "gpu": gpu,
+                 "gpus": gpus, "remat": "full", "microbatches": 1},
+        "plan": {"dp": gpus, "tp": 1, "bound": "compute"},
+        "objectives": {"step_time_s": 1.0, "mfu": mfu, "hbm_gib": 1.0,
+                       "gpus": float(gpus),
+                       "watts": gpus * GPUS[gpu].tdp_watts,
+                       "feasible": True},
+        "search": {"weights": None}, "evaluations": 1,
+    }
+
+
+def test_greedy_start_is_not_lexicographic_on_costs():
+    """When the two caps pull different ways — one candidate cheaper in
+    dollars but hotter in watts ($38.4/6400W tpu32 vs $55.84/5600W
+    h100x8) — greedy must start from the least budget-STRAIN candidate,
+    not the lexicographically cheapest, or it falsely reports a feasible
+    budget as infeasible."""
+    recs = [_tpu_rec("chips=32|remat=full|mb=1", 0.5, chips=32),
+            _cuda_rec("h100", 8, 0.5)]
+    budget = CostEnvelope(usd_per_hour=60.0, watts=6000.0)
+    for solver in ("greedy", "exact"):
+        res = place(["xlstm-350m/train_4k"], recs, budget, solver=solver)
+        assert res.assignments[0].candidate.part == "h100", solver
+        assert budget.admits(res.total_usd, res.total_watts)
+
+
+def test_value_ties_break_to_cheaper_cost():
+    recs = [_tpu_rec("chips=16|remat=full|mb=1", 0.25, chips=16),
+            _tpu_rec("chips=8|remat=full|mb=1", 0.5, chips=8)]
+    # same delivered tflops (mfu x chips x peak), different cost
+    res = place(["xlstm-350m/train_4k"], recs,
+                CostEnvelope(usd_per_hour=100.0), solver="exact")
+    assert res.assignments[0].candidate.count == 8
+
+
+# ---------------------------------------------------------------------------
+# diagnostics: infeasible budgets and missing coverage
+# ---------------------------------------------------------------------------
+
+
+def test_budget_infeasible_raises_with_floor_costs():
+    with pytest.raises(BudgetInfeasibleError) as e:
+        place(WORKLOADS, fixture_records(), CostEnvelope(usd_per_hour=1.0))
+    msg = str(e.value)
+    assert "infeasible" in msg and "cheapest" in msg
+    for w in WORKLOADS:
+        assert w in msg
+
+
+def test_uncovered_workload_raises_coverage_error():
+    with pytest.raises(CoverageError) as e:
+        place(["whisper-base/decode_32k"], fixture_records(), BUDGET)
+    assert "whisper-base/decode_32k" in str(e.value)
+    assert "--evaluate-missing" in str(e.value)
+
+
+def test_cli_exit_codes_and_diagnostics(capsys):
+    argv = ["--fixture", "--workloads", "vgg16@224x224"]
+    assert placement_main(argv + ["--budget-usd", "0.1"]) == 2
+    err = capsys.readouterr().err
+    assert "placement failed" in err and "infeasible" in err
+    assert placement_main(
+        ["--fixture", "--workloads", "whisper-base/decode_32k"]) == 2
+    err = capsys.readouterr().err
+    assert "no store coverage" in err
+    assert placement_main(argv) == 0
+
+
+def test_cli_selftest():
+    assert placement_main(["--selftest"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# stores: pooling, last-wins, resume safety, coverage fallback
+# ---------------------------------------------------------------------------
+
+
+def test_pooled_records_later_stores_win():
+    first = fixture_records()
+    dup = copy.deepcopy(
+        [r for r in first if r["cell_key"].startswith(
+            "arch=starcoder2-3b|shape=train_4k|chips=16|remat=full")])
+    assert len(dup) == 1
+    dup[0]["objectives"]["mfu"] = 0.99  # "newer" evidence in a later store
+    pooled = pooled_records([first, dup])
+    assert len(pooled) == len(first)
+    winner = [r for r in pooled if r["cell_key"] == dup[0]["cell_key"]]
+    assert winner[0]["objectives"]["mfu"] == 0.99
+
+
+def test_mixed_store_resume_is_placement_stable(tmp_path):
+    """Re-running campaigns into the same stores (pure resume, zero new
+    evaluations) must not change a placement drawn from them."""
+    tpu_store = tmp_path / "tpu.jsonl"
+    cuda_store = tmp_path / "cuda.jsonl"
+    be = get_backend("tpu")
+    cells = be.expand_cells(archs=["xlstm-350m"], shapes=["train_4k"],
+                            chips=[8, 16], remats=("full",),
+                            microbatches=(1,))
+    run_campaign(cells, tpu_store, backend="tpu")
+    gc = get_backend("cuda").expand_cells(
+        archs=["xlstm-350m"], shapes=["train_4k"], gpus=[8],
+        gpu_types=("a100-80g",), remats=("full",), microbatches=(1,))
+    run_campaign(gc, cuda_store, backend="cuda")
+
+    budget = CostEnvelope(usd_per_hour=25.0)
+    recs = pooled_records([ResultStore(tpu_store), ResultStore(cuda_store)])
+    before = place(["xlstm-350m/train_4k"], recs, budget)
+
+    rerun = run_campaign(cells, tpu_store, backend="tpu")
+    assert rerun.new_evaluations == 0  # pure resume
+    recs2 = pooled_records([ResultStore(tpu_store), ResultStore(cuda_store)])
+    after = place(["xlstm-350m/train_4k"], recs2, budget)
+    assert _picks(before) == _picks(after)
+    assert before.total_value == after.total_value
+
+
+def test_ensure_coverage_fills_only_the_gap(tmp_path):
+    store = ResultStore(tmp_path / "cov.jsonl")
+    known = candidates_by_workload(store.records(), "tflops")
+    filled = ensure_coverage(["xlstm-350m/decode_32k"], store, known)
+    assert filled == ["xlstm-350m/decode_32k"]
+    recs = store.records()
+    assert recs and all(
+        get_backend(r["backend"]).group_key(r) == "xlstm-350m/decode_32k"
+        for r in recs)
+    assert {r["backend"] for r in recs} == {"tpu", "cuda"}
+    # now covered: a second pass evaluates nothing
+    known = candidates_by_workload(store.records(), "tflops")
+    assert ensure_coverage(["xlstm-350m/decode_32k"], store, known) == []
+    res = place(["xlstm-350m/decode_32k"], store.records(),
+                CostEnvelope(watts=30000.0))
+    assert res.assignments[0].candidate.workload == "xlstm-350m/decode_32k"
+
+
+# ---------------------------------------------------------------------------
+# report + the committed docs example
+# ---------------------------------------------------------------------------
+
+
+def test_render_placement_sections_and_totals():
+    res = place(WORKLOADS, fixture_records(), BUDGET, solver="exact")
+    md = render_placement(res)
+    for must in ("## Assignment", "## Budget utilization",
+                 "## Marginal upgrades", "**total**", "blocked by"):
+        assert must in md
+    assert f"{res.total_usd:.4g}" in md
+
+
+def test_committed_example_placement_is_current(tmp_path):
+    """docs/placement.md's worked example command must reproduce the
+    committed docs/reports/example_placement.md byte-for-byte."""
+    out = tmp_path / "example_placement.md"
+    rc = placement_main([
+        "--fixture",
+        "--workloads",
+        "starcoder2-3b/train_4k,xlstm-350m/decode_32k,vgg16@224x224",
+        "--budget-usd", "60", "--budget-watts", "25000",
+        "--solver", "exact", "--out", str(out)])
+    assert rc == 0
+    committed = ROOT / "docs" / "reports" / "example_placement.md"
+    assert committed.exists(), "docs/reports/example_placement.md missing"
+    assert out.read_text() == committed.read_text(), (
+        "docs/reports/example_placement.md has drifted from what the "
+        "worked example in docs/placement.md generates; regenerate it "
+        "with the command in that doc")

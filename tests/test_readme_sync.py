@@ -1,26 +1,29 @@
 """The README quickstart block and the ``repro.dse`` docstring quickstart
-are verbatim copies by design (ROADMAP); this enforces it."""
+are verbatim copies by design (ROADMAP), and the README's "Placement in
+5 lines" block is a verbatim copy of the ``repro.dse.placement`` module
+docstring's block the same way; this enforces both."""
 from pathlib import Path
 
 import repro.dse
+import repro.dse.placement
 
 ROOT = Path(__file__).resolve().parents[1]
 
 
-def _readme_quickstart() -> str:
+def _readme_block(section_header: str) -> str:
+    """The first ```console fence after a README section header."""
     text = (ROOT / "README.md").read_text()
-    assert "## DSE campaign quickstarts" in text, \
-        "README lost its quickstart section"
-    section = text.split("## DSE campaign quickstarts", 1)[1]
-    assert "```console\n" in section, "quickstart code fence missing"
+    assert section_header in text, \
+        f"README lost its {section_header!r} section"
+    section = text.split(section_header, 1)[1]
+    assert "```console\n" in section, \
+        f"code fence missing under {section_header!r}"
     return section.split("```console\n", 1)[1].split("```", 1)[0].strip("\n")
 
 
-def _docstring_quickstart() -> str:
-    doc = repro.dse.__doc__
-    assert "Quickstart" in doc
+def _docstring_block(doc: str) -> str:
+    """The first 4-space literal block after a ``::`` marker, dedented."""
     block = doc.split("::\n", 1)[1]
-    # dedent the 4-space literal block; stop at the docstring's end
     lines = []
     for line in block.splitlines():
         if line.startswith("    "):
@@ -30,6 +33,16 @@ def _docstring_quickstart() -> str:
         else:  # pragma: no cover - text after the block would end it
             break
     return "\n".join(lines).strip("\n")
+
+
+def _readme_quickstart() -> str:
+    return _readme_block("## DSE campaign quickstarts")
+
+
+def _docstring_quickstart() -> str:
+    doc = repro.dse.__doc__
+    assert "Quickstart" in doc
+    return _docstring_block(doc)
 
 
 def test_readme_quickstart_matches_dse_docstring():
@@ -44,4 +57,23 @@ def test_quickstart_covers_all_backends_and_compare():
     block = _readme_quickstart()
     for needle in ("--backend tpu", "--backend cuda", "repro.dse.report",
                    "--compare"):
+        assert needle in block
+
+
+def test_readme_placement_matches_placement_docstring():
+    readme = _readme_block("## Placement in 5 lines")
+    doc = _docstring_block(repro.dse.placement.__doc__)
+    assert readme == doc, (
+        "README 'Placement in 5 lines' and the repro/dse/placement.py "
+        "docstring block have drifted; they are verbatim copies by "
+        f"design:\n--- README ---\n{readme}\n--- docstring ---\n{doc}")
+
+
+def test_placement_snippet_is_five_lines_and_runnable_shape():
+    block = _readme_block("## Placement in 5 lines")
+    assert len(block.splitlines()) == 5, \
+        "the snippet is advertised as five lines; keep it five"
+    for needle in ("python -m repro.dse.placement", "--stores",
+                   "--workloads", "--budget-usd", "--budget-watts",
+                   "--out"):
         assert needle in block
