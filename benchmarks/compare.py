@@ -25,7 +25,7 @@ timing noise), and rows only one side has are reported, never fatal —
 adding a benchmark must not break CI until ``--update-baseline``
 records it.
 
-    python -m benchmarks.run --only fig1,table1,campaign_tpu,campaign_cuda \\
+    python -m benchmarks.run --only fig1,table1,campaign_fpga,campaign_tpu \\
         --json bench.json
     python -m benchmarks.compare bench.json            # gate (exit 1 on fail)
     python -m benchmarks.compare bench.json --update-baseline

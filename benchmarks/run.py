@@ -19,8 +19,8 @@ import json
 import statistics
 import time
 
-from repro.core import (KU115, ZCU102, PSOConfig, dnnbuilder_design, explore,
-                        generic_only_design)
+from repro.core import (KU115, RAV, ZCU102, PSOConfig, dnnbuilder_design,
+                        explore, generic_only_design)
 from repro.core.local_opt import dpu_proxy_design
 from repro.core.netinfo import INPUT_CASES, TABLE1_NETS, vgg16
 
@@ -193,6 +193,59 @@ def bench_dse_campaign() -> list[dict]:
                     f"resume_evals={rerun.new_evaluations}")}]
 
 
+def bench_fpga_campaign() -> list[dict]:
+    """repro.dse fpga backend hot path: one campaign cell's PSO through the
+    batched array-kernel engine vs the scalar reference path, same seed and
+    trajectory, measured in the same run — plus an ``evaluate_rav_batch``
+    microbench over a fixed random population."""
+    import numpy as np
+
+    from repro.core.batch_eval import evaluate_rav_batch
+    from repro.core.local_opt import evaluate_rav
+    from repro.core.pso import optimize
+
+    net = vgg16(224)
+    sp_max = len(net.major_layers)
+
+    def batched_hook(ravs):
+        return [d.fitness for d in evaluate_rav_batch(net, KU115, ravs)]
+
+    def scalar_hook(ravs):
+        return [evaluate_rav(net, KU115, r).fitness for r in ravs]
+
+    # Warm both paths to campaign steady state (numpy.random import, packed
+    # layer tables, per-split cycle caches) before timing anything.
+    optimize(sp_max=sp_max, batch_max=1,
+             cfg=PSOConfig(population=6, iterations=2, seed=0),
+             batch_fitness_fn=batched_hook)
+    scalar_hook([RAV(sp_max // 2, 1, 0.5, 0.5, 0.5)])
+
+    res_b, us_b = _timed(optimize, sp_max=sp_max, batch_max=1, cfg=_CFG,
+                         batch_fitness_fn=batched_hook)
+    res_s, us_s = _timed(optimize, sp_max=sp_max, batch_max=1, cfg=_CFG,
+                         batch_fitness_fn=scalar_hook)
+    rows = [{
+        "name": "campaign_fpga_vgg16_224_ku115", "us_per_call": us_b,
+        "derived": (f"scalar_us={us_s:.0f};speedup={us_s / us_b:.1f}x;"
+                    f"evals={res_b.evaluations};"
+                    f"same_best={res_b.best_rav == res_s.best_rav};"
+                    f"gops_fitness={res_b.best_fitness:.1f}")}]
+
+    rng = np.random.default_rng(0)
+    ravs = [RAV(int(rng.integers(0, sp_max + 1)), int(rng.integers(1, 5)),
+                float(rng.uniform(0.05, 0.95)), float(rng.uniform(0.05, 0.95)),
+                float(rng.uniform(0.05, 0.95))) for _ in range(128)]
+    out_b, us_bt = _timed(evaluate_rav_batch, net, KU115, ravs)
+    out_s, us_sc = _timed(lambda: [evaluate_rav(net, KU115, r) for r in ravs])
+    agree = all(a.dsp_used == b.dsp_used and a.feasible == b.feasible
+                for a, b in zip(out_s, out_b))
+    rows.append({
+        "name": "evaluate_rav_batch_128", "us_per_call": us_bt,
+        "derived": (f"scalar_us={us_sc:.0f};speedup={us_sc / us_bt:.1f}x;"
+                    f"n=128;agree={agree}")})
+    return rows
+
+
 def bench_tpu_campaign() -> list[dict]:
     """repro.dse tpu backend: a small (arch x shape x chips x remat x mb)
     campaign — wall time, memoized re-run time, and frontier size/spread."""
@@ -301,6 +354,7 @@ BENCHES = {
     "table3": bench_table3_rav,
     "table4": bench_table4_batch,
     "campaign": bench_dse_campaign,
+    "campaign_fpga": bench_fpga_campaign,
     "campaign_tpu": bench_tpu_campaign,
     "campaign_cuda": bench_cuda_campaign,
     "campaign_placement": bench_placement,

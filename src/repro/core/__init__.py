@@ -1,8 +1,10 @@
 """DNNExplorer core: model analysis, analytical accelerator models, and the
 two-level DSE engine (the paper's primary contribution), plus the TPU
 retarget used by the JAX runtime."""
+from .batch_eval import evaluate_rav_batch
 from .explorer import ExplorationResult, explore
 from .generic_model import GenericDesign, best_generic
+from .layer_arrays import PackedLayers, pack_layers
 from .hw_specs import (A100_40G, A100_80G, FPGAS, GPUS, H100, KU115, TPU_V5E,
                        TPUS, VU9P, ZC706, ZCU102, FPGASpec, GPUSpec, TPUSpec)
 from .local_opt import (RAV, DesignPoint, dnnbuilder_design, evaluate_rav,
@@ -13,6 +15,7 @@ from .pso import PSOConfig, PSOResult, optimize
 
 __all__ = [
     "ExplorationResult", "explore", "GenericDesign", "best_generic",
+    "evaluate_rav_batch", "PackedLayers", "pack_layers",
     "A100_40G", "A100_80G", "FPGAS", "GPUS", "H100", "KU115", "TPU_V5E",
     "TPUS", "VU9P", "ZC706", "ZCU102", "FPGASpec", "GPUSpec", "TPUSpec",
     "RAV", "DesignPoint", "dnnbuilder_design",

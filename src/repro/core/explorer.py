@@ -2,7 +2,8 @@
 
 1. *Model/HW Analysis* — :mod:`repro.core.netinfo` profiles the DNN.
 2. *Accelerator Modeling* — :mod:`repro.core.pipeline_model` +
-   :mod:`repro.core.generic_model` provide the analytical models.
+   :mod:`repro.core.generic_model` provide the analytical models
+   (:mod:`repro.core.batch_eval` evaluates them population-at-a-time).
 3. *Architecture Exploration* — global PSO over the RAV
    (:mod:`repro.core.pso`) with local optimizers inside the fitness
    (:mod:`repro.core.local_opt`).
@@ -19,6 +20,7 @@ import dataclasses
 import time
 from typing import Callable
 
+from .batch_eval import evaluate_rav_batch
 from .hw_specs import FPGASpec
 from .local_opt import RAV, DesignPoint, evaluate_rav
 from .netinfo import NetInfo
@@ -50,13 +52,21 @@ def explore(net: NetInfo, fpga: FPGASpec, dw: int = 16, ww: int = 16,
     maximizes; the default is feasible throughput (``DesignPoint.fitness``),
     which keeps the paper's single-objective behavior. :mod:`repro.dse`
     passes weighted multi-objective scalarizations here.
+
+    The PSO's fitness hook evaluates each population through the batched
+    array-kernel engine (:mod:`repro.core.batch_eval`), which shares
+    packed layer and per-split cycle tables across the whole search; the
+    winning RAV is re-evaluated once through the scalar
+    reference path (:func:`~repro.core.local_opt.evaluate_rav`), so the
+    returned design always comes from the reference implementation.
     """
     t0 = time.perf_counter()
     sp_max = len(net.major_layers)
     obj = objective if objective is not None else (lambda d: d.fitness)
 
     def batch_fitness(ravs: list[RAV]) -> list[float]:
-        return [obj(evaluate_rav(net, fpga, r, dw, ww)) for r in ravs]
+        """Whole-population fitness: one batched-engine call per PSO step."""
+        return [obj(d) for d in evaluate_rav_batch(net, fpga, ravs, dw, ww)]
 
     pso = optimize(sp_max=sp_max, batch_max=batch_max, cfg=cfg,
                    batch_fitness_fn=batch_fitness)

@@ -22,6 +22,15 @@ from .netinfo import LayerInfo
 
 BRAM_BITS = 18 * 1024
 
+#: Buffer-capacity fractions per strategy (Sec. 5.3.2). Strategy 1 spends
+#: BRAM on the feature-map + accumulation buffers (weights live in LUTRAM);
+#: strategy 2 carves out a resident weight buffer too. Shared with the
+#: batched array kernels in :mod:`repro.core.batch_eval` so the scalar and
+#: vectorized models cannot drift apart.
+ABUFF_FRAC = {1: 0.25, 2: 0.15}
+FMBUFF_FRAC = {1: 0.75, 2: 0.35}
+WBUFF_FRAC = {1: 0.0, 2: 0.50}
+
 
 @dataclasses.dataclass(frozen=True)
 class GenericDesign:
@@ -46,18 +55,16 @@ class GenericDesign:
     @property
     def cap_abuff(self) -> int:
         # Accumulation buffer: wide/shallow; give it a fixed slice.
-        frac = 0.25 if self.strategy == 1 else 0.15
-        return int(self._bram_bits * frac)
+        return int(self._bram_bits * ABUFF_FRAC[self.strategy])
 
     @property
     def cap_fmbuff(self) -> int:
-        frac = 0.75 if self.strategy == 1 else 0.35
-        return int(self._bram_bits * frac)
+        return int(self._bram_bits * FMBUFF_FRAC[self.strategy])
 
     @property
     def cap_wbuff(self) -> int:
         # Strategy 1 keeps weights in LUTRAM (a double-buffered tile only).
-        return int(self._bram_bits * 0.50) if self.strategy == 2 else 0
+        return int(self._bram_bits * WBUFF_FRAC[self.strategy])
 
     # -- resources ------------------------------------------------------------
     def dsp(self) -> int:
@@ -109,6 +116,8 @@ class GenericDesign:
             # only fm traffic if it spills.
             if self._fm_fits(l, batch):
                 return 0.0
+            if self.bw_bytes <= 0:
+                return float("inf")
             return batch * (l.ifm_bytes(self.dw) + l.ofm_bytes(self.dw)) / self.bw_bytes
 
         l_comp = batch * self._l_comp(l, freq)

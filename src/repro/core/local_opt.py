@@ -57,7 +57,10 @@ class DesignPoint:
 
 
 def _segment_after(net: NetInfo, sp: int) -> list[LayerInfo]:
-    """All layers (incl. pools) after the sp-th major layer."""
+    """All layers (incl. pools) after the sp-th major layer. Always a
+    contiguous suffix of ``net.layers`` — ``layer_arrays.pack_layers``
+    exploits that to index any split's segment in O(1) (identity is
+    regression-tested in ``tests/test_batch_eval.py``)."""
     majors = 0
     out: list[LayerInfo] = []
     for l in net.layers:
@@ -71,7 +74,15 @@ def _segment_after(net: NetInfo, sp: int) -> list[LayerInfo]:
 
 def evaluate_rav(net: NetInfo, fpga: FPGASpec, rav: RAV, dw: int = 16,
                  ww: int = 16, max_rollbacks: int = 12) -> DesignPoint:
-    """Algorithms 2+3 for one RAV. Deterministic, pure."""
+    """Algorithms 2+3 for one RAV. Deterministic, pure.
+
+    This is the scalar *reference* implementation: readable, paper-shaped,
+    one layer at a time. The PSO's population fitness goes through the
+    batched array-kernel twin (:func:`repro.core.batch_eval.
+    evaluate_rav_batch`), which must agree with this function on every
+    discrete decision and to <=1e-9 relative on float objectives
+    (``tests/test_batch_eval.py`` enforces it); the winning RAV is always
+    re-evaluated here."""
     freq = fpga.freq
     majors = net.major_layers
     sp = max(0, min(rav.sp, len(majors)))

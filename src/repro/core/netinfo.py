@@ -90,6 +90,14 @@ class NetInfo:
         return tuple(l for l in self.layers if l.kind != "pool")
 
     @property
+    def major_indices(self) -> tuple[int, ...]:
+        """Index into ``layers`` of each major layer. The generic segment
+        for split point ``sp`` is exactly ``layers[major_indices[sp]:]``
+        (pools trailing major layers <= sp are fused into their stage) —
+        :mod:`repro.core.layer_arrays` keys its packed segments on this."""
+        return tuple(i for i, l in enumerate(self.layers) if l.kind != "pool")
+
+    @property
     def total_ops(self) -> int:
         return sum(l.ops for l in self.layers)
 

@@ -27,6 +27,29 @@ def _pow2_floor(x: float) -> int:
     return 1 << max(0, int(math.floor(math.log2(max(x, 1)))))
 
 
+def stage_dsp(pf: int, alpha: int) -> int:
+    """DSPs for ``pf`` MACs/cycle at ``alpha`` MAC-ops per DSP (Eq. 1).
+    Shared with :mod:`repro.core.batch_eval` so both paths use one formula."""
+    return max(1, (2 * pf) // alpha)
+
+
+def stage_col_ceil(l: LayerInfo, dw: int) -> int:
+    """BRAM blocks demanded by a stage's column/row line buffer alone."""
+    col_bits = l.c * l.h * l.stride * (l.s + 1) * dw
+    return math.ceil(col_bits / BRAM_BITS)
+
+
+def stage_bram(cpf: int, kpf: int, dw: int, ww: int, col_ceil: int,
+               rs: int) -> int:
+    """Column/row buffer + ping-pong weight buffer (Sec. 5.2.2); ``rs`` is
+    the stage's kernel area R*S, ``col_ceil`` its :func:`stage_col_ceil`.
+    BRAM ports are <=36b wide: a CPF-wide parallel read needs that many
+    physical blocks even if shallow."""
+    w_bits = 2 * rs * cpf * kpf * ww
+    min_banks = max(1, math.ceil(cpf * dw / 36))
+    return max(min_banks, col_ceil) + max(1, math.ceil(w_bits / BRAM_BITS))
+
+
 def split_pf(pf: int, c: int, k: int) -> tuple[int, int]:
     """Factor a parallelism budget into (CPF, KPF), both powers of two,
     CPF<=C, KPF<=K; near-square split balances PE broadcast fan-out
@@ -56,19 +79,13 @@ class StageDesign:
 
     def dsp(self) -> int:
         """DSPs for CPF*KPF MACs/cycle; 8-bit packs two MACs per DSP."""
-        alpha = alpha_for(min(self.dw, self.ww))
-        return max(1, (2 * self.pf) // alpha)
+        return stage_dsp(self.pf, alpha_for(min(self.dw, self.ww)))
 
     def bram(self) -> int:
         """Column/row buffer + ping-pong weight buffer (Sec. 5.2.2)."""
         l = self.layer
-        col_bits = l.c * l.h * l.stride * (l.s + 1) * self.dw
-        w_bits = 2 * l.r * l.s * self.cpf * self.kpf * self.ww
-        # BRAM ports are <=36b wide: a CPF-wide parallel read needs that many
-        # physical blocks even if shallow.
-        min_banks = max(1, math.ceil(self.cpf * self.dw / 36))
-        return max(min_banks, math.ceil(col_bits / BRAM_BITS)) + max(
-            1, math.ceil(w_bits / BRAM_BITS))
+        return stage_bram(self.cpf, self.kpf, self.dw, self.ww,
+                          stage_col_ceil(l, self.dw), l.r * l.s)
 
 
 @dataclasses.dataclass

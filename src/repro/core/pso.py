@@ -9,10 +9,11 @@ paper uses 2).
 The update loop is vectorized: per iteration the whole population is pushed
 through one *batched* fitness call (``batch_fitness_fn``) and personal/global
 bests are refreshed with NumPy where/argmax — no per-particle Python
-bookkeeping. Callers that only have a scalar ``fitness_fn`` get the same
-semantics (the batch is evaluated element-wise); campaign-scale callers
-(:mod:`repro.dse`) hand in a real batch hook so a whole population can be
-evaluated per call.
+bookkeeping. :func:`repro.core.explore` hands in a hook backed by the
+batched array-kernel engine (:mod:`repro.core.batch_eval`), so the math
+under the hook is batched too; callers that only have a scalar
+``fitness_fn`` get the same semantics (the batch is evaluated
+element-wise).
 """
 from __future__ import annotations
 
@@ -44,7 +45,7 @@ class PSOResult:
     history: list[float]
 
 
-def _clip_round(pos: np.ndarray, lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+def _clip(pos: np.ndarray, lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
     return np.clip(pos, lo, hi)
 
 
@@ -122,7 +123,7 @@ def optimize(fitness_fn: Callable[[RAV], float] | None = None, *,
         vel = (cfg.inertia * vel
                + cfg.c_local * r1 * (pbest - pos)
                + cfg.c_global * r2 * (gbest[None, :] - pos))
-        pos = _clip_round(pos + vel, lo, hi)
+        pos = _clip(pos + vel, lo, hi)
         fits = fit_batch(pos)
         better = fits > pbest_fit
         pbest = np.where(better[:, None], pos, pbest)

@@ -1,0 +1,187 @@
+"""Batched evaluation engine (PR 5): packed layer arrays + the
+scalar-vs-batched equivalence contract.
+
+The contract: ``evaluate_rav_batch`` must reproduce the scalar reference
+``evaluate_rav`` exactly on every discrete decision (stage PF splits,
+strategy choice, resource usage, feasibility) and to <=1e-9 relative on
+float objectives (NumPy pairwise summation vs Python's sequential sum is
+the only permitted difference).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import KU115, RAV, ZC706, PSOConfig, evaluate_rav, optimize
+from repro.core.batch_eval import evaluate_rav_batch
+from repro.core.generic_model import GenericDesign
+from repro.core.layer_arrays import pack_layers
+from repro.core.local_opt import _segment_after
+from repro.core.netinfo import LayerInfo, NetInfo, mobilenet, vgg16
+
+FLOAT_FIELDS = ("throughput_ips", "gops", "dsp_eff", "latency_s")
+
+
+def random_ravs(n: int, sp_max: int, batch_max: int, seed: int) -> list[RAV]:
+    rng = np.random.default_rng(seed)
+    return [RAV(int(rng.integers(0, sp_max + 1)),
+                int(rng.integers(1, batch_max + 1)),
+                float(rng.uniform(0.05, 0.95)),
+                float(rng.uniform(0.05, 0.95)),
+                float(rng.uniform(0.05, 0.95))) for _ in range(n)]
+
+
+def assert_equivalent(scalar, batched):
+    """Discrete fields exact, float objectives <=1e-9 relative."""
+    assert batched.rav == scalar.rav
+    assert batched.pipeline.batch == scalar.pipeline.batch
+    assert batched.pipeline.stages == scalar.pipeline.stages
+    assert batched.generic == scalar.generic
+    assert batched.dsp_used == scalar.dsp_used
+    assert batched.bram_used == scalar.bram_used
+    assert batched.feasible == scalar.feasible
+    for f in FLOAT_FIELDS:
+        assert getattr(batched, f) == pytest.approx(
+            getattr(scalar, f), rel=1e-9, abs=1e-12), f
+
+
+# ---------------------------------------------------------------------------
+# The randomized equivalence sweep: 2 nets x 2 precisions x >=200 RAVs
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("net_fn,fpga", [(lambda: vgg16(64), ZC706),
+                                         (mobilenet, KU115)])
+@pytest.mark.parametrize("prec", [16, 8])
+def test_equivalence_sweep(net_fn, fpga, prec):
+    """60 random RAVs per (net, fpga, precision) combination — 240 across
+    the grid — must agree between the scalar and batched engines."""
+    net = net_fn()
+    ravs = random_ravs(60, len(net.major_layers), 8, seed=prec)
+    batched = evaluate_rav_batch(net, fpga, ravs, prec, prec)
+    for rav, b in zip(ravs, batched):
+        assert_equivalent(evaluate_rav(net, fpga, rav, prec, prec), b)
+
+
+def test_equivalence_extreme_splits():
+    """The degenerate RAVs: pure-generic (sp=0), pure-pipeline (sp=max),
+    starved resource fractions, and batch > 1."""
+    net = vgg16(224)
+    sp_max = len(net.major_layers)
+    cases = [RAV(0, 1, 0.0, 0.0, 0.0), RAV(0, 8, 0.5, 0.5, 0.5),
+             RAV(sp_max, 1, 0.95, 0.95, 0.95), RAV(sp_max, 4, 0.05, 0.05, 0.05),
+             RAV(6, 2, 0.05, 0.95, 0.05), RAV(6, 2, 0.95, 0.05, 0.95)]
+    batched = evaluate_rav_batch(net, KU115, cases)
+    for rav, b in zip(cases, batched):
+        assert_equivalent(evaluate_rav(net, KU115, rav), b)
+
+
+def test_equivalence_grouped_conv():
+    """Grouped (non-depthwise) convolutions take the generic kernels'
+    ``c // groups`` path; the builder never emits them, so build one by
+    hand and sweep it."""
+    layers = (LayerInfo("conv1", "conv", 56, 56, 3, 64, 3, 3),
+              LayerInfo("g1", "conv", 56, 56, 64, 128, 3, 3, 1, 4),
+              LayerInfo("pool1", "pool", 28, 28, 128, 128, 2, 2, 2),
+              LayerInfo("g2", "conv", 28, 28, 128, 256, 3, 3, 1, 8),
+              LayerInfo("fc1", "fc", 1, 1, 28 * 28 * 256, 100))
+    net = NetInfo("grouped", (56, 56), 3, layers)
+    for rav in random_ravs(25, len(net.major_layers), 4, seed=3):
+        b, = evaluate_rav_batch(net, ZC706, [rav])
+        assert_equivalent(evaluate_rav(net, ZC706, rav), b)
+
+
+def test_batch_results_in_input_order():
+    net = vgg16(64)
+    ravs = random_ravs(16, len(net.major_layers), 4, seed=9)
+    out = evaluate_rav_batch(net, KU115, ravs)
+    assert [d.rav for d in out] == ravs
+
+
+# ---------------------------------------------------------------------------
+# Packed layer arrays
+# ---------------------------------------------------------------------------
+
+
+def test_packed_columns_match_layerinfo():
+    """Every packed column equals the LayerInfo method it was lowered
+    from, across conv / dwconv / pool / fc layers at both precisions."""
+    for net in (mobilenet(), vgg16(32)):
+        for prec in (16, 8):
+            p = pack_layers(net, prec, prec)
+            for i, l in enumerate(net.layers):
+                assert p.macs[i] == l.macs
+                assert p.weight_bytes[i] == l.weight_bytes(prec)
+                assert p.ifm_bytes[i] == l.ifm_bytes(prec)
+                assert p.ofm_bytes[i] == l.ofm_bytes(prec)
+                assert bool(p.is_pool[i]) == (l.kind == "pool")
+                assert bool(p.is_dw[i]) == (l.kind == "dwconv")
+                assert p.groups[i] == l.groups
+            assert p.total_ops == net.total_ops
+
+
+def test_packed_segments_match_segment_after():
+    """layers[seg_start[sp]:] must be exactly ``_segment_after(net, sp)``
+    for every split point, and the suffix maxima must match the segment's
+    channel maxima — on a pool-interleaved net and a dwconv net."""
+    for net in (vgg16(64), mobilenet()):
+        p = pack_layers(net, 16, 16)
+        for sp in range(p.n_major + 1):
+            start, c_max, k_max = p.segment(sp)
+            seg = _segment_after(net, sp)
+            assert list(net.layers[start:]) == seg
+            assert c_max == (max(l.c for l in seg) if seg else 0)
+            assert k_max == (max(l.k for l in seg) if seg else 0)
+
+
+def test_packed_native_vs_resized_inputs():
+    """Resized inputs repack (different geometry), native fixed-topology
+    nets pack at their published input; packing is cached per identity."""
+    small, big = vgg16(64), vgg16(224)
+    p_small, p_big = pack_layers(small, 16, 16), pack_layers(big, 16, 16)
+    assert p_small.n_major == p_big.n_major == 13
+    # 224/64 = 3.5x linear -> 12.25x the pixels layer for layer.
+    assert p_big.h[0] * p_big.w[0] == p_small.h[0] * p_small.w[0] * 49 // 4
+    native = mobilenet()
+    p_native = pack_layers(native, 16, 16)
+    assert (p_native.h[0], p_native.w[0]) == (112, 112)  # stride-2 stem
+    # lru cache: same NetInfo + precision -> same PackedLayers instance.
+    assert pack_layers(small, 16, 16) is p_small
+    assert pack_layers(small, 8, 8) is not p_small
+
+
+# ---------------------------------------------------------------------------
+# Regressions + integration
+# ---------------------------------------------------------------------------
+
+
+def test_pool_spill_zero_bandwidth_is_inf_not_crash():
+    """generic_model regression: the pool-spill branch used to divide by
+    ``bw_bytes`` unguarded; with zero bandwidth it must report an infinite
+    latency like the conv branch, not raise ZeroDivisionError."""
+    pool = LayerInfo("pool", "pool", 112, 112, 256, 256, 2, 2, 2)
+    g = GenericDesign(8, 8, 16, 16, bram=8, bw_bytes=0.0)
+    assert not g._fm_fits(pool)          # tiny BRAM: the fm must spill
+    assert g.layer_latency(pool, 2e8) == float("inf")
+    # and a fitting pool stays free even with no bandwidth at all
+    small = LayerInfo("pool", "pool", 4, 4, 8, 8, 2, 2, 2)
+    big_buf = GenericDesign(8, 8, 16, 16, bram=2000, bw_bytes=0.0)
+    assert big_buf.layer_latency(small, 2e8) == 0.0
+
+
+def test_explore_trajectory_unchanged_by_batched_engine():
+    """Wiring the batched engine into explore() must not move the PSO:
+    same per-iteration history, evaluation count, and best RAV as the
+    scalar fitness hook."""
+    from repro.core import explore
+    net = vgg16(64)
+    cfg = PSOConfig(population=14, iterations=12, seed=5)
+    res = explore(net, ZC706, cfg=cfg)
+
+    def scalar_hook(ravs):
+        return [evaluate_rav(net, ZC706, r).fitness for r in ravs]
+
+    ref = optimize(sp_max=len(net.major_layers), batch_max=1, cfg=cfg,
+                   batch_fitness_fn=scalar_hook)
+    assert res.pso.best_rav == ref.best_rav
+    assert res.pso.history == ref.history
+    assert res.pso.evaluations == ref.evaluations

@@ -193,7 +193,7 @@ def _reference_optimize(fitness_fn, sp_max, batch_max=1, cfg=None):
     regression oracle for the NumPy/batched rewrite."""
     import numpy as np
 
-    from repro.core.pso import PSOResult, _clip_round, _to_rav
+    from repro.core.pso import PSOResult, _clip, _to_rav
 
     cfg = cfg or PSOConfig()
     rng = np.random.default_rng(cfg.seed)
@@ -233,7 +233,7 @@ def _reference_optimize(fitness_fn, sp_max, batch_max=1, cfg=None):
         vel = (cfg.inertia * vel
                + cfg.c_local * r1 * (pbest - pos)
                + cfg.c_global * r2 * (gbest[None, :] - pos))
-        pos = _clip_round(pos + vel, lo, hi)
+        pos = _clip(pos + vel, lo, hi)
         improved = False
         for i in range(cfg.population):
             f = fit(pos[i])
