@@ -243,6 +243,28 @@ def bench_fpga_campaign() -> list[dict]:
         "name": "evaluate_rav_batch_128", "us_per_call": us_bt,
         "derived": (f"scalar_us={us_sc:.0f};speedup={us_sc / us_bt:.1f}x;"
                     f"n=128;agree={agree}")})
+
+    # telemetry overhead: the same tiny campaign untraced vs --trace
+    # (spans + sidecar merge + chrome export); untraced is the gated
+    # configuration, traced shows what --trace costs on top
+    import tempfile
+
+    from repro.dse import run_campaign
+    from repro.dse.campaign import expand_cells
+    from repro.obs import load_events
+
+    cells = expand_cells(["vgg16"], [(64, 64)], ["zc706"], [16, 8], [1])
+    with tempfile.TemporaryDirectory() as td:
+        _, us_plain = _timed(run_campaign, cells, f"{td}/plain.jsonl",
+                             population=6, iterations=4)
+        traced, us_tr = _timed(run_campaign, cells, f"{td}/traced.jsonl",
+                               population=6, iterations=4, trace=True)
+        n_events = len(load_events(traced.events_path))
+    rows.append({
+        "name": "campaign_fpga_traced", "us_per_call": us_tr,
+        "derived": (f"untraced_us={us_plain:.0f};"
+                    f"overhead={us_tr / us_plain:.2f}x;"
+                    f"events={n_events}")})
     return rows
 
 

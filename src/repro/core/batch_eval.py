@@ -57,6 +57,29 @@ def _cdiv(a: np.ndarray, b) -> np.ndarray:
 _split_pf = functools.lru_cache(maxsize=1 << 16)(split_pf)
 _stage_bram = functools.lru_cache(maxsize=1 << 16)(stage_bram)
 
+# Hit/miss tallies for the one cache lru_cache can't see (the per-split
+# level tables living on each PackedLayers instance). Plain int adds —
+# no measurable cost next to the array math they sit beside.
+_LEVELS_STATS = {"hits": 0, "misses": 0}
+
+
+def cache_stats() -> dict[str, dict[str, int]]:
+    """Hit/miss counters for every cache the batched engine leans on,
+    as ``{cache: {hits, misses}}`` — the campaign tracer gauges these
+    per cell so reports can show how much table reuse a search got.
+    Counters are process-global and monotonic; diff two snapshots to
+    attribute activity to one cell."""
+    return {
+        "pack_layers": _info(pack_layers.cache_info()),
+        "split_pf": _info(_split_pf.cache_info()),
+        "stage_bram": _info(_stage_bram.cache_info()),
+        "levels": dict(_LEVELS_STATS),
+    }
+
+
+def _info(ci) -> dict[str, int]:
+    return {"hits": ci.hits, "misses": ci.misses}
+
 
 # ---------------------------------------------------------------------------
 # Generic structure: per-split level tables + the Algorithm-3 sweep kernel
@@ -91,9 +114,12 @@ def _gen_levels(packed: PackedLayers, sp: int) -> _Levels | None:
     when the segment is empty), cached on the instance's ``derived`` dict
     so the tables live and die with the packed layers themselves."""
     try:
-        return packed.derived[sp]
+        lv = packed.derived[sp]
+        _LEVELS_STATS["hits"] += 1
+        return lv
     except KeyError:
         pass
+    _LEVELS_STATS["misses"] += 1
     lv = packed.derived[sp] = _build_levels(packed, sp)
     return lv
 

@@ -27,6 +27,12 @@ from .netinfo import NetInfo
 from .pso import PSOConfig, PSOResult, optimize
 
 
+#: Version stamp on the per-cell convergence ``trace`` dict (bump on
+#: breaking change; readers must tolerate records without the field —
+#: pre-trace stores resume unchanged).
+TRACE_SCHEMA_VERSION = 1
+
+
 @dataclasses.dataclass
 class ExplorationResult:
     net: str
@@ -40,6 +46,28 @@ class ExplorationResult:
         r = self.design.rav
         return (f"[SP={r.sp}, Batch={r.batch}, DSP={r.dsp_frac:.1%}, "
                 f"BRAM={r.bram_frac:.1%}, BW={r.bw_frac:.1%}]")
+
+    def convergence_trace(self) -> dict:
+        """The paper's Fig.-8-style search-efficiency curve as a
+        JSON-native dict: per-iteration best fitness, improvement tail,
+        and why the search stopped. Rides in the campaign store record
+        under ``trace``, so convergence diagnostics (which cells were
+        still improving when the iteration cap hit) come from the store
+        alone — no re-run needed."""
+        p = self.pso
+        hist = [round(float(h), 6) for h in p.history]
+        return {
+            "schema": TRACE_SCHEMA_VERSION,
+            "engine": "pso",
+            "stop_reason": p.stop_reason,
+            "iterations": p.iterations_run,
+            "evaluations": p.evaluations,
+            "cache_hits": p.cache_hits,
+            "best_fitness": float(p.best_fitness),
+            "final_delta": round(hist[-1] - hist[-2], 6)
+            if len(hist) > 1 else 0.0,
+            "history": hist,
+        }
 
 
 def explore(net: NetInfo, fpga: FPGASpec, dw: int = 16, ww: int = 16,

@@ -43,6 +43,14 @@ class PSOResult:
     iterations_run: int
     evaluations: int
     history: list[float]
+    #: Why the search stopped: ``"converged"`` (patience exhausted — the
+    #: paper's early termination) or ``"iteration_cap"`` (budget ran out
+    #: while the best was still moving — the signal multi-fidelity DSE
+    #: uses to promote survivors to a deeper search).
+    stop_reason: str = "iteration_cap"
+    #: Fitness lookups served from the rounded-RAV memo instead of the
+    #: analytical models (``evaluations`` counts the model calls).
+    cache_hits: int = 0
 
 
 def _clip(pos: np.ndarray, lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
@@ -87,12 +95,13 @@ def optimize(fitness_fn: Callable[[RAV], float] | None = None, *,
 
     cache: dict[tuple, float] = {}
     evals = 0
+    hits = 0
 
     def fit_batch(block: np.ndarray) -> np.ndarray:
         """Fitness for every row of ``block``; uncached keys (deduped, in
         first-appearance order — same order the old per-particle loop
         evaluated them) go through one batched call."""
-        nonlocal evals
+        nonlocal evals, hits
         ravs = [_to_rav(p) for p in block]
         keys = [_cache_key(r) for r in ravs]
         pending: dict[tuple, RAV] = {}
@@ -107,6 +116,7 @@ def optimize(fitness_fn: Callable[[RAV], float] | None = None, *,
             for k, v in zip(pending, vals):
                 cache[k] = float(v)
             evals += len(pending)
+        hits += len(keys) - len(pending)
         return np.array([cache[k] for k in keys])
 
     pbest = pos.copy()
@@ -116,6 +126,7 @@ def optimize(fitness_fn: Callable[[RAV], float] | None = None, *,
 
     history = [gbest_fit]
     stale = 0
+    stop_reason = "iteration_cap"
     it = 0
     for it in range(1, cfg.iterations + 1):
         r1 = rng.random((cfg.population, 5))
@@ -135,5 +146,7 @@ def optimize(fitness_fn: Callable[[RAV], float] | None = None, *,
         history.append(gbest_fit)
         stale = 0 if improved else stale + 1
         if stale >= cfg.patience:
+            stop_reason = "converged"
             break
-    return PSOResult(_to_rav(gbest), gbest_fit, it, evals, history)
+    return PSOResult(_to_rav(gbest), gbest_fit, it, evals, history,
+                     stop_reason=stop_reason, cache_hits=hits)

@@ -44,6 +44,14 @@ combinations of DNN workloads and targeted FPGAs", Tables 3/4, Figs. 9-11)
    frontier. ``--compare A B [C ...]`` renders the trajectory between
    stores: per-workload winner deltas, best-objective trajectories, and
    a pooled cross-backend frontier.
+7. *Telemetry* — :mod:`repro.obs` threads structured spans, counters,
+   and gauges through the campaign runner (``--trace``): per-cell
+   queue-wait/eval/append spans from every pool worker land in
+   ``<store>.events.jsonl`` (merged deterministically from per-worker
+   sidecars) plus a Chrome trace at ``<store>.trace.json``; every
+   record carries a ``trace`` field with the search's convergence
+   history and stop reason. ``python -m repro.dse.obs`` summarizes,
+   validates, and exports; the report gains a campaign-health section.
 
 Quickstart (see also ``examples/dse_campaign.py`` and ``README.md``)::
 
@@ -86,8 +94,9 @@ _BACKEND_EXPORTS = ("BACKENDS", "Backend", "CUDABackend", "CUDACell",
                     "FPGABackend", "GPU_OBJECTIVES", "TPUBackend",
                     "TPUCell", "TPU_OBJECTIVES", "get_backend",
                     "workload_families")
-_REPORT_EXPORTS = ("fixture_records", "render_compare", "render_placement",
-                   "render_report")
+_REPORT_EXPORTS = ("fixture_events", "fixture_records", "health_section",
+                   "render_compare", "render_placement", "render_report")
+_OBS_EXPORTS = ("events_for_store", "example_health_md")
 _PLACEMENT_EXPORTS = ("Assignment", "BudgetInfeasibleError", "Candidate",
                       "CoverageError", "PlacementError", "PlacementResult",
                       "candidates_by_workload", "ensure_coverage",
@@ -96,7 +105,7 @@ _PLACEMENT_EXPORTS = ("Assignment", "BudgetInfeasibleError", "Candidate",
 
 __all__ = [
     *_CAMPAIGN_EXPORTS, *_BACKEND_EXPORTS, *_REPORT_EXPORTS,
-    *_PLACEMENT_EXPORTS,
+    *_PLACEMENT_EXPORTS, *_OBS_EXPORTS,
     "NORMALIZED_DEFAULT_WEIGHTS", "NORMALIZED_OBJECTIVES",
     "OBJECTIVES", "ObjectiveSpec", "Objectives", "canonical_vector",
     "normalized_throughput", "scalarize_values", "scalarized_objective",
@@ -119,4 +128,7 @@ def __getattr__(name: str):
     if name in _PLACEMENT_EXPORTS:
         from . import placement
         return getattr(placement, name)
+    if name in _OBS_EXPORTS:
+        from . import obs
+        return getattr(obs, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

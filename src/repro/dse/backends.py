@@ -59,6 +59,7 @@ from typing import Mapping, Sequence
 
 from repro.configs import ARCH_IDS, SHAPES, cell_enabled, get_config
 from repro.core import gpu_planner
+from repro.core.explorer import TRACE_SCHEMA_VERSION
 from repro.core.hw_specs import FPGAS, GPUS, TPU_V5E, alpha_for, pod_cost
 from repro.core.netinfo import TABLE1_NETS
 from repro.core.tpu_planner import evaluate_point, factorizations
@@ -365,6 +366,18 @@ def add_workload_arguments(ap) -> None:
 PLACEMENT_COUNTS: tuple[int, ...] = (8, 16, 32)
 
 
+def enumeration_trace(evaluated: int) -> dict:
+    """Per-cell ``trace`` dict for an exhaustively-enumerated search
+    (tpu/cuda): the whole mapping space is always visited, so the stop
+    reason is ``"exhaustive"`` — such cells are never iteration-capped
+    and never "still improving". Shares the schema of the PSO trace
+    (:meth:`repro.core.explorer.ExplorationResult.convergence_trace`),
+    so health reports render both uniformly."""
+    return {"schema": TRACE_SCHEMA_VERSION, "engine": "enumeration",
+            "stop_reason": "exhaustive", "iterations": evaluated,
+            "evaluations": evaluated, "cache_hits": 0}
+
+
 def _arch_shape(workload_key: str) -> tuple[str, str] | None:
     """``arch/shape`` workload key -> (arch, shape), or None if the key
     isn't in the tpu/cuda key space (both families share it by design)."""
@@ -518,6 +531,7 @@ class TPUBackend(Backend):
             "evaluations": evaluated,
             "search_time_s": round(time.perf_counter() - t0, 4),
             "weights": dict(weights) if weights else None,
+            "trace": enumeration_trace(evaluated),
         }
 
     @staticmethod
@@ -743,6 +757,7 @@ class CUDABackend(Backend):
             "evaluations": evaluated,
             "search_time_s": round(time.perf_counter() - t0, 4),
             "weights": dict(weights) if weights else None,
+            "trace": enumeration_trace(evaluated),
         }
 
     @staticmethod
@@ -861,9 +876,36 @@ def record_backend(rec: Mapping) -> str:
 
 def run_cell_by_backend(backend_name: str, cell, base_seed: int,
                         population: int, iterations: int,
-                        weights: Mapping[str, float] | None) -> dict:
+                        weights: Mapping[str, float] | None,
+                        obs: Mapping | None = None) -> dict:
     """Top-level (picklable) pool entry point: resolve the backend by name
-    in the worker and evaluate one cell."""
-    return get_backend(backend_name).run_cell(
-        cell, base_seed=base_seed, population=population,
-        iterations=iterations, weights=weights)
+    in the worker and evaluate one cell.
+
+    ``obs`` (``{events_dir, t_submit}``) turns on worker-side telemetry:
+    the worker opens its own sidecar under ``events_dir``
+    (:func:`repro.obs.worker_tracer`), back-fills a ``queue.wait`` span
+    from the parent's submit time, nests a ``cell.eval`` span inside
+    ``cell.run``, and gauges the batched engine's cache stats — the
+    parent merges every sidecar after the pool drains. ``obs=None`` (the
+    default, and the disabled-tracing path) touches no files."""
+    be = get_backend(backend_name)
+    if not obs:
+        return be.run_cell(cell, base_seed=base_seed, population=population,
+                           iterations=iterations, weights=weights)
+    from repro.obs import worker_tracer
+    with worker_tracer(obs["events_dir"]) as tracer:
+        tracer.span_at("queue.wait", obs["t_submit"],
+                       time.time() - obs["t_submit"], cell=cell.key)
+        with tracer.span("cell.run", cell=cell.key, backend=backend_name):
+            with tracer.span("cell.eval", cell=cell.key):
+                rec = be.run_cell(cell, base_seed=base_seed,
+                                  population=population,
+                                  iterations=iterations, weights=weights)
+            if backend_name == "fpga":
+                from repro.core.batch_eval import cache_stats
+                for cache, st in cache_stats().items():
+                    tracer.gauge(f"cache.{cache}.hits", st["hits"],
+                                 cell=cell.key)
+                    tracer.gauge(f"cache.{cache}.misses", st["misses"],
+                                 cell=cell.key)
+    return rec

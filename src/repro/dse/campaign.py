@@ -25,15 +25,19 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import json
 import multiprocessing
 import time
 from concurrent.futures import ProcessPoolExecutor, as_completed
+from pathlib import Path
 from typing import TYPE_CHECKING, Callable, Iterable, Mapping, Sequence
 
 from repro.core.explorer import explore
 from repro.core.hw_specs import FPGAS
 from repro.core.netinfo import NetInfo, TABLE1_NETS, vgg16, vgg19
 from repro.core.pso import PSOConfig
+from repro.obs import (NULL, Tracer, chrome_path_for, chrome_trace,
+                       events_dir_for, events_path_for, merge_events)
 
 from .objectives import Objectives, scalarized_objective
 from .pareto import non_dominated, select_diverse
@@ -146,6 +150,7 @@ def run_cell(cell: CampaignCell, base_seed: int = 0, population: int = 20,
         "iterations": res.pso.iterations_run,
         "search_time_s": round(res.search_time_s, 4),
         "weights": dict(weights) if weights else None,
+        "trace": res.convergence_trace(),
     }
 
 
@@ -158,6 +163,8 @@ class CampaignReport:
     new_evaluations: int         # search evaluations actually run this time
     wall_time_s: float
     backend: "Backend | None" = None   # None == fpga (PR-1 compatibility)
+    events_path: Path | None = None    # merged events JSONL (traced runs)
+    trace_path: Path | None = None     # Chrome trace export (traced runs)
 
     def _backend(self) -> "Backend":
         if self.backend is None:
@@ -199,6 +206,8 @@ def run_campaign(cells: Iterable,
                  workers: int = 1,
                  progress: Callable[[str], None] | None = None,
                  backend: "str | Backend" = "fpga",
+                 trace: bool = False,
+                 verbose: bool = False,
                  ) -> CampaignReport:
     """Run (or resume) a campaign against a JSONL store.
 
@@ -212,12 +221,34 @@ def run_campaign(cells: Iterable,
     serving stale designs. ``workers > 1`` fans the remaining cells over a
     spawn-based process pool; results land in the store in completion
     order, the report in cell order either way.
+
+    ``trace=True`` records structured telemetry (:mod:`repro.obs`):
+    per-cell queue-wait / eval / store-append spans and pool gauges land
+    in per-process sidecars under ``<store>.events/``, which the parent
+    merges into ``<store>.events.jsonl`` and exports as a Chrome trace
+    (``<store>.trace.json``) when the campaign finishes; the report's
+    ``events_path`` / ``trace_path`` point at both. Disabled (the
+    default), no telemetry files are touched and the only residue is a
+    no-op tracer. ``verbose`` adds per-cell convergence detail (stop
+    reason, PSO cache hits) to the progress lines.
     """
     from .backends import get_backend, run_cell_by_backend
     be = get_backend(backend)
     cells = list(cells)
     if not isinstance(store, ResultStore):
         store = ResultStore(store)
+
+    tracer, events_dir = NULL, None
+    if trace:
+        events_dir = events_dir_for(store.path)
+        if events_dir.exists():  # stale sidecars would pollute the merge
+            for old in events_dir.glob("*.jsonl"):
+                old.unlink()
+        tracer = Tracer(events_dir / "main.jsonl", proc="main")
+        if store.corrupt_lines:
+            tracer.count("store.corrupt_lines", store.corrupt_lines,
+                         store=str(store.path))
+
     t0 = time.perf_counter()
     search = be.search_config(base_seed=base_seed, population=population,
                               iterations=iterations, weights=weights)
@@ -229,36 +260,77 @@ def run_campaign(cells: Iterable,
     say(f"campaign[{be.name}]: {len(cells)} cells, "
         f"{len(cells) - len(todo)} reused, "
         f"{len(todo)} to run (workers={workers})")
+    tracer.count("cells.reused", len(cells) - len(todo))
 
     new_evals = 0
+    done = 0
 
     def finish(cell, rec: dict) -> None:
-        nonlocal new_evals
-        store.put(rec)
+        nonlocal new_evals, done
+        with tracer.span("store.append", cell=cell.key):
+            store.put(rec)
         new_evals += rec["evaluations"]
-        say(f"  done {cell.key}: {be.headline(rec)}, "
-            f"{rec['evaluations']} evals, {rec['search_time_s']:.2f}s")
+        done += 1
+        tracer.count("cells.done")
+        elapsed = time.perf_counter() - t0
+        eta = elapsed / done * (len(todo) - done)
+        extra = ""
+        if verbose and rec.get("trace"):
+            tr = rec["trace"]
+            extra = (f" [{tr.get('stop_reason', '?')}"
+                     f"@{tr.get('iterations', '?')}it"
+                     f", {tr.get('cache_hits', 0)} cache hits]")
+        say(f"  [{done}/{len(todo)}] {cell.key}: {be.headline(rec)}, "
+            f"{rec['evaluations']} evals, {rec['search_time_s']:.2f}s"
+            f"{extra} | elapsed {elapsed:.1f}s, eta {eta:.0f}s")
 
-    if workers > 1 and len(todo) > 1:
-        # spawn, not fork: callers routinely have JAX (multithreaded)
-        # initialized, and forking a threaded parent can deadlock workers.
-        ctx = multiprocessing.get_context("spawn")
-        with ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as pool:
-            futs = {pool.submit(run_cell_by_backend, be.name, c, base_seed,
-                                population, iterations, weights): c
-                    for c in todo}
-            for fut in as_completed(futs):
-                finish(futs[fut], fut.result())
-    else:
-        for c in todo:
-            finish(c, be.run_cell(c, base_seed=base_seed,
-                                  population=population,
-                                  iterations=iterations, weights=weights))
+    with tracer.span("campaign", backend=be.name, cells=len(cells),
+                     todo=len(todo), workers=workers):
+        if workers > 1 and len(todo) > 1:
+            # spawn, not fork: callers routinely have JAX (multithreaded)
+            # initialized, and forking a threaded parent can deadlock
+            # workers.
+            ctx = multiprocessing.get_context("spawn")
+            with ProcessPoolExecutor(max_workers=workers,
+                                     mp_context=ctx) as pool:
+                futs = {}
+                for c in todo:
+                    obs = ({"events_dir": str(events_dir),
+                            "t_submit": time.time()} if trace else None)
+                    futs[pool.submit(run_cell_by_backend, be.name, c,
+                                     base_seed, population, iterations,
+                                     weights, obs)] = c
+                inflight = len(futs)
+                tracer.gauge("pool.inflight", inflight, workers=workers)
+                for fut in as_completed(futs):
+                    finish(futs[fut], fut.result())
+                    inflight -= 1
+                    tracer.gauge("pool.inflight", inflight, workers=workers)
+        else:
+            for c in todo:
+                with tracer.span("cell.run", cell=c.key, backend=be.name):
+                    with tracer.span("cell.eval", cell=c.key):
+                        rec = be.run_cell(c, base_seed=base_seed,
+                                          population=population,
+                                          iterations=iterations,
+                                          weights=weights)
+                finish(c, rec)
+
+    events_path = trace_json = None
+    if trace:
+        tracer.close()
+        events_path = events_path_for(store.path)
+        events = merge_events(events_dir, events_path)
+        trace_json = chrome_path_for(store.path)
+        trace_json.write_text(json.dumps(chrome_trace(events)))
+        say(f"telemetry: {len(events)} events -> {events_path} "
+            f"(chrome trace: {trace_json})")
 
     records = [store.get(c.key) for c in cells]
     return CampaignReport(cells, records, reused_cells=len(cells) - len(todo),
                           new_cells=len(todo), new_evaluations=new_evals,
-                          wall_time_s=time.perf_counter() - t0, backend=be)
+                          wall_time_s=time.perf_counter() - t0, backend=be,
+                          events_path=events_path, trace_path=trace_json)
 
 
 if __name__ == "__main__":

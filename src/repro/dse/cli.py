@@ -95,6 +95,18 @@ def main(argv: list[str] | None = None) -> CampaignReport:
     ap.add_argument("--top", type=int, default=8, help="ranked rows to print")
     ap.add_argument("--frontier-json", default=None,
                     help="also dump the frontier records to this JSON file")
+    ap.add_argument("--trace", action="store_true",
+                    help="record campaign telemetry (repro.obs): per-cell "
+                         "spans + pool gauges into <store>.events.jsonl "
+                         "and a Chrome trace at <store>.trace.json; "
+                         "inspect with python -m repro.dse.obs <store>")
+    vq = ap.add_mutually_exclusive_group()
+    vq.add_argument("-v", "--verbose", action="store_true",
+                    help="per-cell convergence detail (stop reason, PSO "
+                         "cache hits) on the progress lines")
+    vq.add_argument("-q", "--quiet", action="store_true",
+                    help="suppress per-cell progress lines (the final "
+                         "report still prints)")
     args = ap.parse_args(argv)
 
     backend = get_backend(args.backend)
@@ -105,7 +117,10 @@ def main(argv: list[str] | None = None) -> CampaignReport:
     report = run_campaign(cells, ResultStore(store_path),
                           base_seed=args.seed, population=args.population,
                           iterations=args.iterations, weights=weights,
-                          workers=workers, progress=print, backend=backend)
+                          workers=workers,
+                          progress=None if args.quiet else print,
+                          backend=backend, trace=args.trace,
+                          verbose=args.verbose)
     front = print_report(report, weights, args.top)
 
     if args.frontier_json:
@@ -113,6 +128,9 @@ def main(argv: list[str] | None = None) -> CampaignReport:
             json.dump(front, f, indent=2, sort_keys=True)
         print(f"\nfrontier -> {args.frontier_json}")
     print(f"store -> {store_path}")
+    if report.events_path:
+        print(f"events -> {report.events_path}")
+        print(f"chrome trace -> {report.trace_path}")
     return report
 
 

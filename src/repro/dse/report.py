@@ -45,6 +45,10 @@ import json
 from pathlib import Path
 from typing import Mapping, Sequence
 
+from repro.obs import (campaign_wall, counter_totals, events_path_for,
+                       load_events, slowest_spans, span_totals,
+                       worker_utilization)
+
 from .backends import BACKENDS, get_backend, record_backend
 from .objectives import (NORMALIZED_DEFAULT_WEIGHTS, NORMALIZED_OBJECTIVES,
                          canonical_vector, scalarize_values)
@@ -411,13 +415,121 @@ def _bench_section(bench: Mapping) -> list[str]:
     return lines
 
 
+# ---------------------------------------------------------------------------
+# campaign health (repro.obs events + per-record convergence traces)
+# ---------------------------------------------------------------------------
+
+
+def _pct_of(part: float, whole: float) -> str:
+    return f"{part / whole:.0%}" if whole > 0 else "—"
+
+
+def health_section(records: Sequence[Mapping],
+                   events: Sequence[Mapping] | None = None,
+                   k: int = 10) -> list[str]:
+    """The campaign-health section: where the wall time went (spans),
+    which workers sat idle (utilization), which cells dominated the run
+    (slowest-cell table), and per-cell convergence diagnostics from the
+    ``trace`` field — flagging cells that were still improving when the
+    iteration cap hit, i.e. cells whose budget was too small."""
+    lines = ["## Campaign health", ""]
+    events = list(events or [])
+
+    if events:
+        wall = campaign_wall(events)
+        totals = span_totals(events)
+        lines += [f"### Wall-time breakdown ({wall:.2f}s campaign wall, "
+                  f"{len(events)} events)", ""]
+        rows = [[f"`{name}`", st.count, f"{st.total_s:.3f}",
+                 f"{st.max_s:.3f}", _pct_of(st.total_s, wall)]
+                for name, st in sorted(totals.items(),
+                                       key=lambda kv: -kv[1].total_s)]
+        lines += _table(["span", "count", "total s", "max s",
+                         "% of wall"], rows)
+        lines += [""]
+
+        util = worker_utilization(events)
+        if util:
+            mean = sum(r["util"] for r in util.values()) / len(util)
+            lines += [f"### Worker utilization (mean {mean:.0%} over "
+                      f"{len(util)} process(es))", ""]
+            rows = [[f"`{proc}`", r["cells"], f"{r['busy_s']:.3f}",
+                     f"{r['util']:.0%}"]
+                    for proc, r in sorted(util.items())]
+            lines += _table(["process", "cells", "busy s", "utilization"],
+                            rows)
+            lines += ["", "_Utilization is `cell.eval` busy time over the "
+                          "campaign wall; low values mean workers idled "
+                          "(too few cells, or one straggler cell)._", ""]
+
+        slow = slowest_spans(events, k=k)
+        if slow:
+            lines += [f"### Slowest cells (top {len(slow)} by `cell.eval` "
+                      f"time)", ""]
+            rows = [[f"`{e.get('attrs', {}).get('cell', '?')}`",
+                     f"{e.get('dur', 0.0):.3f}",
+                     _pct_of(e.get("dur", 0.0), wall),
+                     f"`{e.get('proc', '?')}`"] for e in slow]
+            lines += _table(["cell", "eval s", "% of wall", "process"], rows)
+            lines += [""]
+
+        counts = counter_totals(events)
+        if counts:
+            lines += ["### Counters", ""]
+            lines += _table(["counter", "total"],
+                            [[f"`{n}`", f"{v:g}"]
+                             for n, v in sorted(counts.items())])
+            lines += [""]
+
+    traced = [r for r in records if isinstance(r.get("trace"), Mapping)]
+    if traced:
+        lines += [f"### Convergence diagnostics ({len(traced)} of "
+                  f"{len(records)} cells carry a `trace`)", ""]
+        rows = []
+        capped = []
+        for r in sorted(traced, key=lambda r: r["cell_key"]):
+            t = r["trace"]
+            stop = t.get("stop_reason", "?")
+            if stop == "iteration_cap":
+                capped.append(r["cell_key"])
+                stop = "**iteration_cap**"
+            rows.append([f"`{r['cell_key']}`", t.get("engine", "?"), stop,
+                         t.get("iterations", "?"), t.get("evaluations", "?"),
+                         t.get("cache_hits", "?"),
+                         _fmt(t.get("final_delta", 0.0))])
+        lines += _table(["cell", "engine", "stop", "iters", "evals",
+                         "cache hits", "final Δ"], rows)
+        lines += [""]
+        if capped:
+            lines += [f"⚠ {len(capped)} cell(s) hit the iteration cap while "
+                      f"still within the improvement patience — the search "
+                      f"was still moving when it was cut off. Consider "
+                      f"rerunning with a higher `--iterations`: "
+                      + ", ".join(f"`{c}`" for c in capped) + ".", ""]
+        else:
+            lines += ["All traced searches stopped on their own terms "
+                      "(converged or exhaustive) — the iteration budget "
+                      "was sufficient.", ""]
+
+    if not events and not traced:
+        lines += ["_No telemetry: the store records carry no `trace` field "
+                  "and no events file was found. Re-run the campaign with "
+                  "`--trace` to populate both._", ""]
+    return lines
+
+
 def render_report(records: Sequence[Mapping], *,
                   title: str = "DSE campaign report",
-                  bench: Mapping | None = None, k: int = 12) -> str:
+                  bench: Mapping | None = None, k: int = 12,
+                  events: Sequence[Mapping] | None = None) -> str:
     """Records (any mix of backends) -> a Markdown report string.
 
     ``k`` caps each frontier table at the k most-spread designs
     (NSGA-II rank + crowding order); ``k <= 0`` means no cap.
+    ``events`` (merged ``repro.obs`` events, e.g. from
+    ``<store>.events.jsonl``) adds the campaign-health section; records
+    with a ``trace`` field add convergence diagnostics even without
+    events.
     """
     groups: dict[str, list[dict]] = {}
     for r in records:
@@ -434,6 +546,9 @@ def render_report(records: Sequence[Mapping], *,
         lines += _backend_section(name, groups[name], k)
     if len([n for n in groups if n in BACKENDS]) > 1:
         lines += _cross_backend_section(list(records), k)
+    if events or any(isinstance(r.get("trace"), Mapping) for r in records):
+        lines += health_section(records, events, k=min(k, 10) if k > 0
+                                else 10)
     if bench:
         lines += _bench_section(bench)
     return "\n".join(lines).rstrip() + "\n"
@@ -458,8 +573,12 @@ def fixture_records() -> list[dict]:
         ("alexnet", 0, "ku115", 2250.0, 3280.0, 0.44, 0.594, 820, True),
         ("alexnet", 0, "zcu102", 990.0, 1450.0, 1.01, 0.577, 640, False),
     ]
-    for net, h, fpga, ips, gops, lat, eff, bram, ok in fpga_pts:
+    for i, (net, h, fpga, ips, gops, lat, eff, bram, ok) \
+            in enumerate(fpga_pts):
         size = f"{h}x{h}" if h else "native"
+        # one deliberately iteration-capped cell (index 0) so health
+        # reports exercise the "still improving at the cap" flag
+        capped = i == 0
         recs.append({
             "schema": 1,
             "cell_key": f"net={net}|in={size}|fpga={fpga}|prec=16|bmax=1",
@@ -473,6 +592,16 @@ def fixture_records() -> list[dict]:
             "search": {"base_seed": 0, "population": 20, "iterations": 30,
                        "weights": None},
             "evaluations": 600,
+            "trace": {
+                "schema": 1, "engine": "pso",
+                "stop_reason": "iteration_cap" if capped else "converged",
+                "iterations": 30 if capped else 10 + i,
+                "evaluations": 600, "cache_hits": 40 + 7 * i,
+                "best_fitness": ips,
+                "final_delta": 1.25 if capped else 0.0,
+                "history": [round(ips * f, 6)
+                            for f in (0.82, 0.97, 1.0)],
+            },
         })
     tpu_pts = [  # (arch, shape, chips, remat, mb, dp, tp, step, mfu, hbm, ok)
         ("starcoder2-3b", "train_4k", 8, "full", 2, 8, 1, 18.1, 0.52,
@@ -501,6 +630,9 @@ def fixture_records() -> list[dict]:
                            "chips": float(chips), "feasible": ok},
             "search": {"weights": None},
             "evaluations": 4,
+            "trace": {"schema": 1, "engine": "enumeration",
+                      "stop_reason": "exhaustive", "iterations": 4,
+                      "evaluations": 4, "cache_hits": 0},
         })
     cuda_pts = [  # (arch, shape, gpu, n, remat, mb, dp, tp,
                   #  step, mfu, hbm, watts, ok)
@@ -529,8 +661,53 @@ def fixture_records() -> list[dict]:
                            "gpus": float(n), "watts": w, "feasible": ok},
             "search": {"weights": None},
             "evaluations": 4,
+            "trace": {"schema": 1, "engine": "enumeration",
+                      "stop_reason": "exhaustive", "iterations": 4,
+                      "evaluations": 4, "cache_hits": 0},
         })
     return recs
+
+
+def fixture_events() -> list[dict]:
+    """A tiny deterministic merged-events stream matching two of the
+    fixture FPGA cells: a campaign span over two spawn workers, each
+    with queue-wait / cell.run / cell.eval spans, store appends, pool
+    gauges, and counters. Hand-written timestamps (no clocks), so the
+    rendered health report is byte-stable — the committed
+    ``docs/reports/example_health.md`` drift test depends on that."""
+    a = "net=vgg16|in=64x64|fpga=ku115|prec=16|bmax=1"
+    b = "net=vgg16|in=64x64|fpga=zcu102|prec=16|bmax=1"
+
+    def ev(kind, name, proc, ts, seq, **fields):
+        attrs = fields.pop("attrs", {})
+        return {"schema": 1, "kind": kind, "name": name, "proc": proc,
+                "ts": ts, "seq": seq, **fields, "attrs": attrs}
+
+    return sorted([
+        ev("gauge", "pool.inflight", "main", 100.05, 0, value=2.0),
+        ev("span", "queue.wait", "worker-1", 100.4, 0, dur=0.35, depth=0,
+           attrs={"cell": a}),
+        ev("span", "cell.eval", "worker-1", 100.45, 1, dur=3.6, depth=1,
+           attrs={"cell": a}),
+        ev("span", "cell.run", "worker-1", 100.4, 2, dur=3.7, depth=0,
+           attrs={"cell": a, "backend": "fpga"}),
+        ev("span", "queue.wait", "worker-2", 100.5, 0, dur=0.45, depth=0,
+           attrs={"cell": b}),
+        ev("span", "cell.eval", "worker-2", 100.55, 1, dur=5.8, depth=1,
+           attrs={"cell": b}),
+        ev("span", "cell.run", "worker-2", 100.5, 2, dur=5.9, depth=0,
+           attrs={"cell": b, "backend": "fpga"}),
+        ev("span", "store.append", "main", 104.2, 1, dur=0.012, depth=1,
+           attrs={"cell": a}),
+        ev("counter", "cells.done", "main", 104.25, 2, value=1),
+        ev("gauge", "pool.inflight", "main", 104.3, 3, value=1.0),
+        ev("span", "store.append", "main", 106.5, 4, dur=0.011, depth=1,
+           attrs={"cell": b}),
+        ev("counter", "cells.done", "main", 106.55, 5, value=1),
+        ev("gauge", "pool.inflight", "main", 106.6, 6, value=0.0),
+        ev("span", "campaign", "main", 100.0, 7, dur=6.65, depth=0,
+           attrs={"backend": "fpga", "cells": 2, "todo": 2, "workers": 2}),
+    ], key=lambda e: (e["ts"], e["proc"], e["seq"]))
 
 
 # ---------------------------------------------------------------------------
@@ -565,14 +742,18 @@ def main(argv: list[str] | None = None) -> int:
 
     if args.selftest:
         fix = fixture_records()
-        md = render_report(fix, title="selftest campaign", k=args.top)
+        md = render_report(fix, title="selftest campaign", k=args.top,
+                           events=fixture_events())
         half = [r for r in fix if r.get("backend") != "cuda"]
         cmp_md = render_compare([("tpu+fpga", half),
                                  ("all", fix)], k=args.top)
         for must in ("Pareto frontier", "Backend `fpga`", "Backend `tpu`",
                      "Backend `cuda`", "Per-workload winners",
                      "Objective trade-offs", "Cross-backend frontier",
-                     "Backend champions"):
+                     "Backend champions", "Campaign health",
+                     "Wall-time breakdown", "Worker utilization",
+                     "Slowest cells", "Convergence diagnostics",
+                     "iteration cap"):
             if must not in md:
                 raise SystemExit(f"selftest: section {must!r} missing "
                                  f"from rendered report")
@@ -622,14 +803,20 @@ def main(argv: list[str] | None = None) -> int:
     if args.bench:
         with open(args.bench) as f:
             bench = json.load(f)
+    # merged telemetry from a --trace run rides next to the store; pick
+    # it up automatically so traced campaigns get the health section
+    ev_path = events_path_for(args.store)
+    events = load_events(ev_path) if ev_path.exists() else None
     title = args.title or f"DSE campaign report — {Path(args.store).name}"
-    md = render_report(store.records(), title=title, bench=bench, k=args.top)
+    md = render_report(store.records(), title=title, bench=bench, k=args.top,
+                       events=events)
     out = Path(args.out) if args.out else \
         DEFAULT_REPORT_DIR / f"{Path(args.store).stem}.md"
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(md)
     print(f"report -> {out} ({len(md)} chars, "
-          f"{len(store)} cells, backends: {', '.join(store.backends())})")
+          f"{len(store)} cells, backends: {', '.join(store.backends())}"
+          + (f", {len(events)} telemetry events" if events else "") + ")")
     return 0
 
 

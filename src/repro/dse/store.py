@@ -12,10 +12,12 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import warnings
 from pathlib import Path
 from typing import Iterator
 
 from repro.core.local_opt import RAV
+from repro.obs import NULL
 
 SCHEMA_VERSION = 1
 
@@ -29,28 +31,57 @@ def rav_hash(rav: RAV) -> str:
 
 
 class ResultStore:
-    """Dict-like view over a JSONL file of campaign cell records."""
+    """Dict-like view over a JSONL file of campaign cell records.
 
-    def __init__(self, path: str | os.PathLike):
+    Loading is corruption-aware: a torn FINAL line is the expected
+    leftover of a killed run and is dropped silently, but an undecodable
+    line anywhere else means real damage (truncation mid-file, a bad
+    concatenation, disk trouble) and is surfaced — counted on
+    :attr:`corrupt_lines`, warned about, and reported to ``tracer`` as
+    the ``store.corrupt_lines`` obs counter. :attr:`skipped_lines`
+    counts every dropped line including the torn tail.
+    """
+
+    def __init__(self, path: str | os.PathLike, tracer=NULL):
         self.path = Path(path)
+        self.tracer = tracer
         self._records: dict[str, dict] = {}
+        #: Undecodable lines dropped on load (torn final line included).
+        self.skipped_lines = 0
+        #: Undecodable NON-final lines — real corruption, never the
+        #: benign torn tail of a killed run.
+        self.corrupt_lines = 0
         self._load()
 
     def _load(self) -> None:
         if not self.path.exists():
             return
         with self.path.open() as f:
-            for line in f:
-                line = line.strip()
-                if not line:
-                    continue
-                try:
-                    rec = json.loads(line)
-                except json.JSONDecodeError:
-                    continue  # torn final line from a killed run
-                key = rec.get("cell_key")
-                if key:
-                    self._records[key] = rec
+            lines = [ln.strip() for ln in f]
+        while lines and not lines[-1]:
+            lines.pop()
+        last = len(lines) - 1
+        for i, line in enumerate(lines):
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                self.skipped_lines += 1
+                if i != last:  # torn final line from a killed run is fine
+                    self.corrupt_lines += 1
+                continue
+            key = rec.get("cell_key")
+            if key:
+                self._records[key] = rec
+        if self.corrupt_lines:
+            self.tracer.count("store.corrupt_lines", self.corrupt_lines,
+                              store=str(self.path))
+            warnings.warn(
+                f"store {self.path}: skipped {self.corrupt_lines} corrupt "
+                f"non-final line(s) — the file is damaged beyond a torn "
+                f"final append; affected cells will re-run",
+                RuntimeWarning, stacklevel=3)
 
     def get(self, cell_key: str) -> dict | None:
         return self._records.get(cell_key)
