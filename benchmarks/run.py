@@ -268,6 +268,43 @@ def bench_fpga_campaign() -> list[dict]:
     return rows
 
 
+def bench_searcher_engines() -> list[dict]:
+    """repro.core.search: every registered engine on the Table-3 flagship
+    cell (vgg16/224/ku115), same population/iteration budget. Headline:
+    hyperband must reach best-fitness parity with pure PSO at equal or
+    lower wall-clock while triaging a ~100x larger candidate pool through
+    the screening relaxation (``screened`` counts those candidates)."""
+    from repro.core.search import searcher_names
+
+    net = vgg16(224)
+    # warm the packed-table / per-split cycle caches once so engine rows
+    # measure search, not first-touch model building
+    explore(net, KU115, cfg=PSOConfig(population=6, iterations=2, seed=1))
+
+    rows, by_engine = [], {}
+    for name in searcher_names():
+        res, us = _timed(explore, net, KU115, cfg=_CFG, searcher=name)
+        by_engine[name] = (res, us)
+        p = res.pso
+        rows.append({
+            "name": f"searcher_{name}_vgg16_224_ku115", "us_per_call": us,
+            "derived": (f"fitness={p.best_fitness:.3f};"
+                        f"evals={p.evaluations};screened={p.screened};"
+                        f"stop={p.stop_reason}")})
+
+    (res_h, us_h), (res_p, us_p) = by_engine["hyperband"], by_engine["pso"]
+    pool = res_h.pso.screened + res_h.pso.evaluations
+    rows.append({
+        "name": "campaign_fpga_hyperband", "us_per_call": us_h,
+        "derived": (f"pso_us={us_p:.0f};wall_ratio={us_h / us_p:.2f}x;"
+                    f"fitness={res_h.pso.best_fitness:.3f};"
+                    f"pso_fitness={res_p.pso.best_fitness:.3f};"
+                    f"parity={res_h.pso.best_fitness >= res_p.pso.best_fitness};"
+                    f"screened={res_h.pso.screened};"
+                    f"space_x={pool / max(1, res_p.pso.evaluations):.0f}x")})
+    return rows
+
+
 def bench_tpu_campaign() -> list[dict]:
     """repro.dse tpu backend: a small (arch x shape x chips x remat x mb)
     campaign — wall time, memoized re-run time, and frontier size/spread."""
@@ -377,6 +414,7 @@ BENCHES = {
     "table4": bench_table4_batch,
     "campaign": bench_dse_campaign,
     "campaign_fpga": bench_fpga_campaign,
+    "campaign_fpga_hyperband": bench_searcher_engines,
     "campaign_tpu": bench_tpu_campaign,
     "campaign_cuda": bench_cuda_campaign,
     "campaign_placement": bench_placement,

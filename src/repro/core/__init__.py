@@ -1,7 +1,7 @@
 """DNNExplorer core: model analysis, analytical accelerator models, and the
 two-level DSE engine (the paper's primary contribution), plus the TPU
 retarget used by the JAX runtime."""
-from .batch_eval import evaluate_rav_batch
+from .batch_eval import evaluate_rav_batch, screen_rav_batch
 from .explorer import ExplorationResult, explore
 from .generic_model import GenericDesign, best_generic
 from .layer_arrays import PackedLayers, pack_layers
@@ -12,10 +12,14 @@ from .local_opt import (RAV, DesignPoint, dnnbuilder_design, evaluate_rav,
 from .netinfo import INPUT_CASES, TABLE1_NETS, LayerInfo, NetInfo, vgg16
 from .pipeline_model import PipelineDesign, StageDesign, design_pipeline
 from .pso import PSOConfig, PSOResult, optimize
+from .search import (SearchResult, Searcher, SearchSpace, SEARCHERS,
+                     make_searcher, run_search, searcher_names)
 
 __all__ = [
     "ExplorationResult", "explore", "GenericDesign", "best_generic",
-    "evaluate_rav_batch", "PackedLayers", "pack_layers",
+    "evaluate_rav_batch", "screen_rav_batch", "PackedLayers", "pack_layers",
+    "SearchResult", "Searcher", "SearchSpace", "SEARCHERS",
+    "make_searcher", "run_search", "searcher_names",
     "A100_40G", "A100_80G", "FPGAS", "GPUS", "H100", "KU115", "TPU_V5E",
     "TPUS", "VU9P", "ZC706", "ZCU102", "FPGASpec", "GPUSpec", "TPUSpec",
     "RAV", "DesignPoint", "dnnbuilder_design",

@@ -4,8 +4,9 @@
 2. *Accelerator Modeling* — :mod:`repro.core.pipeline_model` +
    :mod:`repro.core.generic_model` provide the analytical models
    (:mod:`repro.core.batch_eval` evaluates them population-at-a-time).
-3. *Architecture Exploration* — global PSO over the RAV
-   (:mod:`repro.core.pso`) with local optimizers inside the fitness
+3. *Architecture Exploration* — a pluggable search engine over the RAV
+   (:mod:`repro.core.search`; default is the paper's PSO, Algorithm 1)
+   with local optimizers inside the fitness
    (:mod:`repro.core.local_opt`).
 
 This module runs the flow for ONE (DNN, FPGA) pair and one scalar
@@ -20,11 +21,14 @@ import dataclasses
 import time
 from typing import Callable
 
-from .batch_eval import evaluate_rav_batch
+import numpy as np
+
+from .batch_eval import evaluate_rav_batch, screen_rav_batch
 from .hw_specs import FPGASpec
 from .local_opt import RAV, DesignPoint, evaluate_rav
 from .netinfo import NetInfo
-from .pso import PSOConfig, PSOResult, optimize
+from .pso import PSOConfig, PSOResult, PSOSearcher, optimize  # noqa: F401
+from .search import SearchSpace, make_searcher, run_search
 
 
 #: Version stamp on the per-cell convergence ``trace`` dict (bump on
@@ -38,6 +42,9 @@ class ExplorationResult:
     net: str
     fpga: str
     design: DesignPoint
+    #: The search engine's result — historically always PSO's, now any
+    #: registered engine's (:class:`repro.core.search.SearchResult`;
+    #: the field name is kept for compatibility).
     pso: PSOResult
     search_time_s: float
 
@@ -53,12 +60,14 @@ class ExplorationResult:
         and why the search stopped. Rides in the campaign store record
         under ``trace``, so convergence diagnostics (which cells were
         still improving when the iteration cap hit) come from the store
-        alone — no re-run needed."""
+        alone — no re-run needed. Multi-fidelity engines additionally
+        report ``screened`` (candidates triaged through the cheap
+        relaxation, never fully evaluated)."""
         p = self.pso
         hist = [round(float(h), 6) for h in p.history]
-        return {
+        trace = {
             "schema": TRACE_SCHEMA_VERSION,
-            "engine": "pso",
+            "engine": p.engine,
             "stop_reason": p.stop_reason,
             "iterations": p.iterations_run,
             "evaluations": p.evaluations,
@@ -68,36 +77,66 @@ class ExplorationResult:
             if len(hist) > 1 else 0.0,
             "history": hist,
         }
+        if p.screened:
+            trace["screened"] = p.screened
+        return trace
 
 
 def explore(net: NetInfo, fpga: FPGASpec, dw: int = 16, ww: int = 16,
             batch_max: int = 1, cfg: PSOConfig | None = None,
             objective: Callable[[DesignPoint], float] | None = None,
+            searcher: str = "pso", searcher_config: dict | None = None,
             ) -> ExplorationResult:
     """Run the full DNNExplorer flow for one (DNN, FPGA) pair.
 
-    ``objective`` scalarizes a :class:`DesignPoint` into the fitness the PSO
-    maximizes; the default is feasible throughput (``DesignPoint.fitness``),
-    which keeps the paper's single-objective behavior. :mod:`repro.dse`
-    passes weighted multi-objective scalarizations here.
+    ``objective`` scalarizes a :class:`DesignPoint` into the fitness the
+    search maximizes; the default is feasible throughput
+    (``DesignPoint.fitness``), which keeps the paper's single-objective
+    behavior. :mod:`repro.dse` passes weighted multi-objective
+    scalarizations here.
 
-    The PSO's fitness hook evaluates each population through the batched
-    array-kernel engine (:mod:`repro.core.batch_eval`), which shares
-    packed layer and per-split cycle tables across the whole search; the
-    winning RAV is re-evaluated once through the scalar
-    reference path (:func:`~repro.core.local_opt.evaluate_rav`), so the
-    returned design always comes from the reference implementation.
+    ``searcher`` picks the engine from the registry
+    (:data:`repro.core.search.SEARCHERS`; default ``"pso"``, the
+    paper's Algorithm 1) and ``searcher_config`` overrides that
+    engine's config fields. ``cfg`` keeps its historical meaning: its
+    population / iterations / patience / seed carry over to whichever
+    engine runs (engines ignore knobs they don't have).
+
+    The engine's fitness hook evaluates each population through the
+    batched array-kernel engine (:mod:`repro.core.batch_eval`), which
+    shares packed layer and per-split cycle tables across the whole
+    search; multi-fidelity engines triage candidates through the
+    vectorized screening relaxation
+    (:func:`~repro.core.batch_eval.screen_rav_batch`) first. The
+    winning RAV is re-evaluated once through the scalar reference path
+    (:func:`~repro.core.local_opt.evaluate_rav`), so the returned
+    design always comes from the reference implementation.
     """
     t0 = time.perf_counter()
     sp_max = len(net.major_layers)
     obj = objective if objective is not None else (lambda d: d.fitness)
+    cfg = cfg or PSOConfig()
 
     def batch_fitness(ravs: list[RAV]) -> list[float]:
-        """Whole-population fitness: one batched-engine call per PSO step."""
+        """Whole-population fitness: one batched-engine call per step."""
         return [obj(d) for d in evaluate_rav_batch(net, fpga, ravs, dw, ww)]
 
-    pso = optimize(sp_max=sp_max, batch_max=batch_max, cfg=cfg,
-                   batch_fitness_fn=batch_fitness)
-    design = evaluate_rav(net, fpga, pso.best_rav, dw, ww)
-    return ExplorationResult(net.name, fpga.name, design, pso,
+    def screen(block: np.ndarray) -> np.ndarray:
+        """Cheap-fidelity triage over a raw position block: relaxed
+        throughput, NOT ``objective`` — multi-fidelity engines rank
+        rungs on it, then score survivors with the true objective at
+        full fidelity."""
+        return screen_rav_batch(net, fpga, block, dw, ww)
+
+    space = SearchSpace(sp_max=sp_max, batch_max=batch_max)
+    if searcher == "pso" and not searcher_config:
+        engine = PSOSearcher(space, cfg)    # the paper's exact path
+    else:
+        base = dict(population=cfg.population, iterations=cfg.iterations,
+                    patience=cfg.patience, seed=cfg.seed)
+        engine = make_searcher(searcher, space, base=base,
+                               overrides=searcher_config)
+    res = run_search(engine, batch_fitness_fn=batch_fitness, screen_fn=screen)
+    design = evaluate_rav(net, fpga, res.best_rav, dw, ww)
+    return ExplorationResult(net.name, fpga.name, design, res,
                              time.perf_counter() - t0)

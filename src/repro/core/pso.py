@@ -6,14 +6,22 @@ fitness is the (scalarized) objective returned by the local optimizers
 global best fails to improve for ``patience`` consecutive iterations (the
 paper uses 2).
 
-The update loop is vectorized: per iteration the whole population is pushed
-through one *batched* fitness call (``batch_fitness_fn``) and personal/global
-bests are refreshed with NumPy where/argmax — no per-particle Python
-bookkeeping. :func:`repro.core.explore` hands in a hook backed by the
-batched array-kernel engine (:mod:`repro.core.batch_eval`), so the math
-under the hook is batched too; callers that only have a scalar
-``fitness_fn`` get the same semantics (the batch is evaluated
-element-wise).
+The swarm is one engine behind the ask/tell :class:`~repro.core.search.Searcher`
+protocol: :class:`PSOSearcher` keeps the algorithm state (positions,
+velocities, bests) and :func:`repro.core.search.run_search` owns the
+shared bookkeeping — the rounded-RAV memo, budget accounting, result
+assembly. The update loop is vectorized: per iteration the whole
+population is pushed through one *batched* fitness call and
+personal/global bests are refreshed with NumPy where/argmax.
+:func:`repro.core.explore` hands in a hook backed by the batched
+array-kernel engine (:mod:`repro.core.batch_eval`), so the math under
+the hook is batched too; callers that only have a scalar ``fitness_fn``
+get the same semantics (the batch is evaluated element-wise).
+
+Trajectories are bit-identical to the pre-protocol loop under a fixed
+seed — the RNG draw order (init positions, velocities, then r1/r2 per
+iteration) is pinned by the golden-trajectory fixture in
+``tests/test_search.py``.
 """
 from __future__ import annotations
 
@@ -23,34 +31,11 @@ from typing import Callable, Sequence
 import numpy as np
 
 from .local_opt import RAV
+from .search import (SearchResult, Searcher, SearchSpace, register_searcher,
+                     run_search)
 
-
-@dataclasses.dataclass
-class PSOConfig:
-    population: int = 24
-    iterations: int = 40
-    inertia: float = 0.729       # w
-    c_local: float = 1.494       # c1
-    c_global: float = 1.494      # c2
-    patience: int = 2            # early-termination window (paper Sec. 7.2)
-    seed: int = 0
-
-
-@dataclasses.dataclass
-class PSOResult:
-    best_rav: RAV
-    best_fitness: float
-    iterations_run: int
-    evaluations: int
-    history: list[float]
-    #: Why the search stopped: ``"converged"`` (patience exhausted — the
-    #: paper's early termination) or ``"iteration_cap"`` (budget ran out
-    #: while the best was still moving — the signal multi-fidelity DSE
-    #: uses to promote survivors to a deeper search).
-    stop_reason: str = "iteration_cap"
-    #: Fitness lookups served from the rounded-RAV memo instead of the
-    #: analytical models (``evaluations`` counts the model calls).
-    cache_hits: int = 0
+#: Historical name: every engine now returns this shared result type.
+PSOResult = SearchResult
 
 
 def _clip(pos: np.ndarray, lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
@@ -63,10 +48,92 @@ def _to_rav(pos: np.ndarray) -> RAV:
                bw_frac=float(pos[4]))
 
 
-def _cache_key(rav: RAV) -> tuple:
-    # Round fractions to 2 decimals for cache hits without losing much.
-    t = rav.as_tuple()
-    return (t[0], t[1], round(t[2], 2), round(t[3], 2), round(t[4], 2))
+@dataclasses.dataclass
+class PSOConfig:
+    population: int = 24
+    iterations: int = 40
+    inertia: float = 0.729       # w
+    c_local: float = 1.494       # c1
+    c_global: float = 1.494      # c2
+    patience: int = 2            # early-termination window (paper Sec. 7.2)
+    seed: int = 0
+
+    def eval_cap(self) -> int:
+        return self.population * (self.iterations + 1)
+
+
+class PSOSearcher(Searcher):
+    """Algorithm 1 as an ask/tell engine. ``init_positions`` overrides
+    the canonical seed particles (rows 0..n-1) — the hook hyperband's
+    refinement stage uses to start the swarm at its screen survivors;
+    the default path plants the canonical three exactly as the
+    pre-protocol loop did."""
+
+    name = "pso"
+
+    def __init__(self, space: SearchSpace, cfg: PSOConfig,
+                 init_positions: np.ndarray | None = None):
+        super().__init__(space, cfg)
+        rng = np.random.default_rng(cfg.seed)
+        self._rng = rng
+        self._lo, self._hi = space.lo(), space.hi()
+        pos = rng.uniform(self._lo, self._hi, size=(cfg.population, 5))
+        if init_positions is None:
+            pos[:3] = space.canonical()
+        else:
+            n = min(len(init_positions), cfg.population)
+            pos[:n] = init_positions[:n]
+        self._pos = pos
+        self._vel = rng.uniform(-1, 1, size=(cfg.population, 5)) \
+            * (self._hi - self._lo) * 0.1
+        self._pbest = None
+        self._pbest_fit = None
+        self._stale = 0
+
+    def ask(self) -> np.ndarray | None:
+        if self.done:
+            return None
+        if self._pbest is None:      # initial population
+            return self._pos
+        cfg = self.cfg
+        r1 = self._rng.random((cfg.population, 5))
+        r2 = self._rng.random((cfg.population, 5))
+        self._vel = (cfg.inertia * self._vel
+                     + cfg.c_local * r1 * (self._pbest - self._pos)
+                     + cfg.c_global * r2 * (self.best_pos[None, :] - self._pos))
+        self._pos = np.clip(self._pos + self._vel, self._lo, self._hi)
+        return self._pos
+
+    def tell(self, fits: np.ndarray) -> None:
+        if self._pbest is None:      # init round
+            self._pbest = self._pos.copy()
+            self._pbest_fit = fits
+            g = int(np.argmax(fits))
+            self.best_pos = self._pbest[g].copy()
+            self.best_fit = float(fits[g])
+            self.history = [self.best_fit]
+            if self.cfg.iterations <= 0:
+                self.done = True
+            return
+        better = fits > self._pbest_fit
+        self._pbest = np.where(better[:, None], self._pos, self._pbest)
+        self._pbest_fit = np.where(better, fits, self._pbest_fit)
+        best_i = int(np.argmax(fits))
+        improved = bool(fits[best_i] > self.best_fit)
+        if improved:
+            self.best_pos = self._pos[best_i].copy()
+            self.best_fit = float(fits[best_i])
+        self.iterations_run += 1
+        self.history.append(self.best_fit)
+        self._stale = 0 if improved else self._stale + 1
+        if self._stale >= self.cfg.patience:
+            self.stop_reason = "converged"
+            self.done = True
+        elif self.iterations_run >= self.cfg.iterations:
+            self.done = True
+
+
+register_searcher("pso", PSOSearcher, PSOConfig)
 
 
 def optimize(fitness_fn: Callable[[RAV], float] | None = None, *,
@@ -81,72 +148,7 @@ def optimize(fitness_fn: Callable[[RAV], float] | None = None, *,
     """
     if fitness_fn is None and batch_fitness_fn is None:
         raise TypeError("optimize() needs fitness_fn or batch_fitness_fn")
-    cfg = cfg or PSOConfig()
-    rng = np.random.default_rng(cfg.seed)
-    lo = np.array([0.0, 1.0, 0.05, 0.05, 0.05])
-    hi = np.array([float(sp_max), float(batch_max), 0.95, 0.95, 0.95])
-
-    pos = rng.uniform(lo, hi, size=(cfg.population, 5))
-    # Seed a few canonical particles: pure-generic, half-split, pure-pipeline.
-    pos[0] = [0.0, 1.0, 0.05, 0.05, 0.05]
-    pos[1] = [sp_max / 2, 1.0, 0.5, 0.5, 0.5]
-    pos[2] = [float(sp_max), 1.0, 0.95, 0.95, 0.95]
-    vel = rng.uniform(-1, 1, size=(cfg.population, 5)) * (hi - lo) * 0.1
-
-    cache: dict[tuple, float] = {}
-    evals = 0
-    hits = 0
-
-    def fit_batch(block: np.ndarray) -> np.ndarray:
-        """Fitness for every row of ``block``; uncached keys (deduped, in
-        first-appearance order — same order the old per-particle loop
-        evaluated them) go through one batched call."""
-        nonlocal evals, hits
-        ravs = [_to_rav(p) for p in block]
-        keys = [_cache_key(r) for r in ravs]
-        pending: dict[tuple, RAV] = {}
-        for k, r in zip(keys, ravs):
-            if k not in cache and k not in pending:
-                pending[k] = r
-        if pending:
-            if batch_fitness_fn is not None:
-                vals = batch_fitness_fn(list(pending.values()))
-            else:
-                vals = [fitness_fn(r) for r in pending.values()]
-            for k, v in zip(pending, vals):
-                cache[k] = float(v)
-            evals += len(pending)
-        hits += len(keys) - len(pending)
-        return np.array([cache[k] for k in keys])
-
-    pbest = pos.copy()
-    pbest_fit = fit_batch(pos)
-    g_idx = int(np.argmax(pbest_fit))
-    gbest, gbest_fit = pbest[g_idx].copy(), float(pbest_fit[g_idx])
-
-    history = [gbest_fit]
-    stale = 0
-    stop_reason = "iteration_cap"
-    it = 0
-    for it in range(1, cfg.iterations + 1):
-        r1 = rng.random((cfg.population, 5))
-        r2 = rng.random((cfg.population, 5))
-        vel = (cfg.inertia * vel
-               + cfg.c_local * r1 * (pbest - pos)
-               + cfg.c_global * r2 * (gbest[None, :] - pos))
-        pos = _clip(pos + vel, lo, hi)
-        fits = fit_batch(pos)
-        better = fits > pbest_fit
-        pbest = np.where(better[:, None], pos, pbest)
-        pbest_fit = np.where(better, fits, pbest_fit)
-        best_i = int(np.argmax(fits))
-        improved = bool(fits[best_i] > gbest_fit)
-        if improved:
-            gbest, gbest_fit = pos[best_i].copy(), float(fits[best_i])
-        history.append(gbest_fit)
-        stale = 0 if improved else stale + 1
-        if stale >= cfg.patience:
-            stop_reason = "converged"
-            break
-    return PSOResult(_to_rav(gbest), gbest_fit, it, evals, history,
-                     stop_reason=stop_reason, cache_hits=hits)
+    space = SearchSpace(sp_max=sp_max, batch_max=batch_max)
+    searcher = PSOSearcher(space, cfg or PSOConfig())
+    return run_search(searcher, fitness_fn=fitness_fn,
+                      batch_fitness_fn=batch_fitness_fn)

@@ -93,6 +93,29 @@ def parse_inputs(text: str) -> list[tuple[int, int]]:
     return out
 
 
+def parse_searcher_config(text: str) -> dict | None:
+    """``"screen=2048,survivors=8"`` -> engine-config override dict (None
+    if empty). Values coerce to int, then float, else stay strings, so
+    the stored search config is JSON-stable regardless of whether it
+    came from the CLI or a programmatic call."""
+    if not text:
+        return None
+    out: dict = {}
+    for tok in _csv(text):
+        name, sep, val = (part.strip() for part in tok.partition("="))
+        if not name or not sep:
+            raise ValueError(f"bad searcher-config token {tok!r}; "
+                             f"expected name=value")
+        try:
+            out[name] = int(val)
+        except ValueError:
+            try:
+                out[name] = float(val)
+            except ValueError:
+                out[name] = val
+    return out
+
+
 def parse_weights(text: str) -> dict[str, float] | None:
     """``"throughput_ips=1,dsp_eff=500"`` -> weight dict (None if empty).
     A bare ``name`` or ``name=`` means weight 1.0."""
@@ -124,6 +147,10 @@ class Backend(abc.ABC):
     objectives: tuple[ObjectiveSpec, ...]
     default_weights: Mapping[str, float]
     default_store: str
+    #: Whether ``--searcher`` applies: True only for backends whose cells
+    #: run a pluggable search engine (fpga); exhaustive enumerators
+    #: (tpu, cuda) reject any non-default engine up front.
+    supports_searchers: bool = False
 
     # -- objective-vector helpers (schema-generic, shared) ------------------
 
@@ -157,13 +184,21 @@ class Backend(abc.ABC):
     @abc.abstractmethod
     def run_cell(self, cell, *, base_seed: int = 0, population: int = 20,
                  iterations: int = 30,
-                 weights: Mapping[str, float] | None = None) -> dict:
-        """Evaluate ONE cell -> a JSONL store record."""
+                 weights: Mapping[str, float] | None = None,
+                 searcher: str = "pso",
+                 searcher_config: Mapping | None = None) -> dict:
+        """Evaluate ONE cell -> a JSONL store record. ``searcher`` /
+        ``searcher_config`` select the engine on backends that search
+        (ignored by exhaustive enumerators, which accept only the
+        default — :func:`repro.dse.campaign.run_campaign` rejects the
+        rest up front)."""
 
     @abc.abstractmethod
     def search_config(self, *, base_seed: int, population: int,
                       iterations: int,
-                      weights: Mapping[str, float] | None) -> dict:
+                      weights: Mapping[str, float] | None,
+                      searcher: str = "pso",
+                      searcher_config: Mapping | None = None) -> dict:
         """The settings a record was searched with (resume-match key)."""
 
     # -- presentation --------------------------------------------------------
@@ -234,12 +269,20 @@ class FPGABackend(Backend):
     :func:`repro.core.explore`) — same designs, ~an order of magnitude
     less analytical-model time per cell (the ``campaign_fpga`` bench
     measures both paths in one run).
+
+    The only backend with a pluggable per-cell search engine
+    (``supports_searchers``): ``--searcher`` picks from the
+    :data:`repro.core.search.SEARCHERS` registry (default: the paper's
+    PSO) and ``--searcher-config`` overrides that engine's config —
+    see ``docs/search.md``. The other backends enumerate their mapping
+    spaces exhaustively and reject the flags.
     """
 
     name = "fpga"
     objectives = OBJECTIVES
     default_weights = DEFAULT_WEIGHTS
     default_store = "results/dse_campaign.jsonl"
+    supports_searchers = True
 
     def expand_cells(self, *, nets: Sequence[str],
                      inputs: Sequence[tuple[int, int]],
@@ -249,14 +292,16 @@ class FPGABackend(Backend):
         return expand_cells(nets, inputs, fpgas, precisions, batch_caps)
 
     def run_cell(self, cell, *, base_seed=0, population=20, iterations=30,
-                 weights=None) -> dict:
+                 weights=None, searcher="pso", searcher_config=None) -> dict:
         from .campaign import run_cell
-        return run_cell(cell, base_seed, population, iterations, weights)
+        return run_cell(cell, base_seed, population, iterations, weights,
+                        searcher, searcher_config)
 
     def search_config(self, *, base_seed, population, iterations,
-                      weights) -> dict:
+                      weights, searcher="pso", searcher_config=None) -> dict:
         from .campaign import _search_config
-        return _search_config(base_seed, population, iterations, weights)
+        return _search_config(base_seed, population, iterations, weights,
+                              searcher, searcher_config)
 
     def normalized(self, rec: Mapping) -> dict:
         """GOP/s -> TFLOP/s against the board's power/price and the
@@ -487,7 +532,8 @@ class TPUBackend(Backend):
         return cells
 
     def run_cell(self, cell: TPUCell, *, base_seed=0, population=20,
-                 iterations=30, weights=None) -> dict:
+                 iterations=30, weights=None, searcher="pso",
+                 searcher_config=None) -> dict:
         """Enumerate the (dp, tp) factorizations of the cell's chip count;
         keep the best mapping: feasible first, then highest scalarized
         objective (ties to the earlier factorization — smaller tp)."""
@@ -545,11 +591,11 @@ class TPUBackend(Backend):
         }
 
     def search_config(self, *, base_seed, population, iterations,
-                      weights) -> dict:
+                      weights, searcher="pso", searcher_config=None) -> dict:
         """The planner enumerates its space exhaustively and
-        deterministically, so PSO knobs and seeds are irrelevant here;
-        only the scalarization (which picks the per-cell mapping)
-        invalidates stored cells."""
+        deterministically, so search-engine knobs and seeds are
+        irrelevant here; only the scalarization (which picks the
+        per-cell mapping) invalidates stored cells."""
         return {"weights": {k: float(v) for k, v in weights.items()}
                 if weights else None}
 
@@ -711,7 +757,8 @@ class CUDABackend(Backend):
         return cells
 
     def run_cell(self, cell: CUDACell, *, base_seed=0, population=20,
-                 iterations=30, weights=None) -> dict:
+                 iterations=30, weights=None, searcher="pso",
+                 searcher_config=None) -> dict:
         """Enumerate the (dp, tp) factorizations of the cell's GPU count
         on the cell's part; keep the best mapping: feasible first, then
         highest scalarized objective (ties to the smaller tp)."""
@@ -772,7 +819,7 @@ class CUDABackend(Backend):
         }
 
     def search_config(self, *, base_seed, population, iterations,
-                      weights) -> dict:
+                      weights, searcher="pso", searcher_config=None) -> dict:
         """Deterministic exhaustive enumeration, like the TPU backend:
         only the scalarization (which picks the per-cell mapping)
         invalidates stored cells."""
@@ -877,7 +924,9 @@ def record_backend(rec: Mapping) -> str:
 def run_cell_by_backend(backend_name: str, cell, base_seed: int,
                         population: int, iterations: int,
                         weights: Mapping[str, float] | None,
-                        obs: Mapping | None = None) -> dict:
+                        obs: Mapping | None = None,
+                        searcher: str = "pso",
+                        searcher_config: Mapping | None = None) -> dict:
     """Top-level (picklable) pool entry point: resolve the backend by name
     in the worker and evaluate one cell.
 
@@ -891,7 +940,9 @@ def run_cell_by_backend(backend_name: str, cell, base_seed: int,
     be = get_backend(backend_name)
     if not obs:
         return be.run_cell(cell, base_seed=base_seed, population=population,
-                           iterations=iterations, weights=weights)
+                           iterations=iterations, weights=weights,
+                           searcher=searcher,
+                           searcher_config=searcher_config)
     from repro.obs import worker_tracer
     with worker_tracer(obs["events_dir"]) as tracer:
         tracer.span_at("queue.wait", obs["t_submit"],
@@ -900,7 +951,9 @@ def run_cell_by_backend(backend_name: str, cell, base_seed: int,
             with tracer.span("cell.eval", cell=cell.key):
                 rec = be.run_cell(cell, base_seed=base_seed,
                                   population=population,
-                                  iterations=iterations, weights=weights)
+                                  iterations=iterations, weights=weights,
+                                  searcher=searcher,
+                                  searcher_config=searcher_config)
             if backend_name == "fpga":
                 from repro.core.batch_eval import cache_stats
                 for cache, st in cache_stats().items():

@@ -111,20 +111,33 @@ def cell_seed(base_seed: int, cell: CampaignCell) -> int:
 
 
 def _search_config(base_seed: int, population: int, iterations: int,
-                   weights: Mapping[str, float] | None) -> dict:
+                   weights: Mapping[str, float] | None,
+                   searcher: str = "pso",
+                   searcher_config: Mapping | None = None) -> dict:
     """What a record was searched *with*. Stored per record and compared on
     resume, so a store never silently serves results found under different
-    PSO settings or objective weights. JSON-native values only (the dict
-    must survive a json round trip unchanged)."""
-    return {"base_seed": int(base_seed), "population": int(population),
-            "iterations": int(iterations),
-            "weights": {k: float(v) for k, v in weights.items()} if weights
-            else None}
+    search settings or objective weights — including a different search
+    ENGINE: a store written by one engine resumed under another re-runs
+    instead of mixing results. JSON-native values only (the dict must
+    survive a json round trip unchanged). The ``searcher`` keys are only
+    present when non-default, so PR-1 stores (written before engines were
+    pluggable) still resume byte-for-byte under the default PSO."""
+    cfg = {"base_seed": int(base_seed), "population": int(population),
+           "iterations": int(iterations),
+           "weights": {k: float(v) for k, v in weights.items()} if weights
+           else None}
+    if searcher != "pso" or searcher_config:
+        cfg["searcher"] = searcher
+        cfg["searcher_config"] = dict(searcher_config) \
+            if searcher_config else None
+    return cfg
 
 
 def run_cell(cell: CampaignCell, base_seed: int = 0, population: int = 20,
              iterations: int = 30,
-             weights: Mapping[str, float] | None = None) -> dict:
+             weights: Mapping[str, float] | None = None,
+             searcher: str = "pso",
+             searcher_config: Mapping | None = None) -> dict:
     """One full explore() for one cell -> a store record. Top-level (and all
     arguments picklable) so ProcessPoolExecutor can ship it to workers."""
     net = build_net(cell.net, cell.h, cell.w)
@@ -133,14 +146,16 @@ def run_cell(cell: CampaignCell, base_seed: int = 0, population: int = 20,
                     seed=cell_seed(base_seed, cell))
     res = explore(net, fpga, dw=cell.precision, ww=cell.precision,
                   batch_max=cell.batch_max, cfg=cfg,
-                  objective=scalarized_objective(weights))
+                  objective=scalarized_objective(weights),
+                  searcher=searcher, searcher_config=searcher_config)
     d = res.design
     return {
         "schema": SCHEMA_VERSION,
         "cell_key": cell.key,
         "cell": dataclasses.asdict(cell),
         "net_name": net.name,
-        "search": _search_config(base_seed, population, iterations, weights),
+        "search": _search_config(base_seed, population, iterations, weights,
+                                 searcher, searcher_config),
         "seed": cfg.seed,
         "rav": dataclasses.asdict(d.rav),
         "rav_hash": rav_hash(d.rav),
@@ -208,6 +223,8 @@ def run_campaign(cells: Iterable,
                  backend: "str | Backend" = "fpga",
                  trace: bool = False,
                  verbose: bool = False,
+                 searcher: str = "pso",
+                 searcher_config: Mapping | None = None,
                  ) -> CampaignReport:
     """Run (or resume) a campaign against a JSONL store.
 
@@ -231,9 +248,22 @@ def run_campaign(cells: Iterable,
     default), no telemetry files are touched and the only residue is a
     no-op tracer. ``verbose`` adds per-cell convergence detail (stop
     reason, PSO cache hits) to the progress lines.
+
+    ``searcher`` picks the FPGA cells' search engine
+    (:data:`repro.core.search.SEARCHERS`; default ``"pso"``) and
+    ``searcher_config`` overrides that engine's config fields. Both ride
+    in the stored search config, so a store written by one engine never
+    silently serves a campaign run under another — mismatched cells
+    re-run. Backends that enumerate exhaustively (tpu, cuda) accept only
+    the default engine.
     """
     from .backends import get_backend, run_cell_by_backend
     be = get_backend(backend)
+    if searcher != "pso" and not getattr(be, "supports_searchers", False):
+        raise ValueError(
+            f"backend {be.name!r} enumerates its space exhaustively and "
+            f"has no pluggable search engine; --searcher {searcher!r} is "
+            f"only valid for the fpga backend")
     cells = list(cells)
     if not isinstance(store, ResultStore):
         store = ResultStore(store)
@@ -251,7 +281,9 @@ def run_campaign(cells: Iterable,
 
     t0 = time.perf_counter()
     search = be.search_config(base_seed=base_seed, population=population,
-                              iterations=iterations, weights=weights)
+                              iterations=iterations, weights=weights,
+                              searcher=searcher,
+                              searcher_config=searcher_config)
     # A stored cell counts as done only if it was searched with the same
     # settings; a config change re-runs (and overwrites) stale records.
     todo = [c for c in cells
@@ -299,7 +331,8 @@ def run_campaign(cells: Iterable,
                             "t_submit": time.time()} if trace else None)
                     futs[pool.submit(run_cell_by_backend, be.name, c,
                                      base_seed, population, iterations,
-                                     weights, obs)] = c
+                                     weights, obs, searcher,
+                                     searcher_config)] = c
                 inflight = len(futs)
                 tracer.gauge("pool.inflight", inflight, workers=workers)
                 for fut in as_completed(futs):
@@ -313,7 +346,9 @@ def run_campaign(cells: Iterable,
                         rec = be.run_cell(c, base_seed=base_seed,
                                           population=population,
                                           iterations=iterations,
-                                          weights=weights)
+                                          weights=weights,
+                                          searcher=searcher,
+                                          searcher_config=searcher_config)
                 finish(c, rec)
 
     events_path = trace_json = None

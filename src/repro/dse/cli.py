@@ -25,8 +25,10 @@ import argparse
 import json
 import os
 
+from repro.core.search import searcher_names
+
 from .backends import (BACKENDS, get_backend, parse_inputs,  # noqa: F401
-                       parse_weights)
+                       parse_searcher_config, parse_weights)
 from .campaign import CampaignReport, run_campaign
 from .pareto import diverse_front
 from .store import ResultStore
@@ -88,6 +90,16 @@ def main(argv: list[str] | None = None) -> CampaignReport:
     ap.add_argument("--seed", type=int, default=0,
                     help="base seed; per-cell seeds derive from it "
                          "(fpga only; the tpu planner is deterministic)")
+    ap.add_argument("--searcher", choices=searcher_names(), default="pso",
+                    help="search engine per fpga cell (default: pso, the "
+                         "paper's Algorithm 1; hyperband = multi-fidelity "
+                         "successive halving). Stored in the resume-match "
+                         "config: a store written by one engine re-runs "
+                         "under another instead of mixing results")
+    ap.add_argument("--searcher-config", default="",
+                    help="engine config overrides, e.g. "
+                         "screen=2048,survivors=8 (fields of the engine's "
+                         "config dataclass; see docs/search.md)")
     ap.add_argument("--weights", default="",
                     help="scalarization, e.g. throughput_ips=1,dsp_eff=500 "
                          "(fpga default: throughput only, the paper's "
@@ -120,7 +132,9 @@ def main(argv: list[str] | None = None) -> CampaignReport:
                           workers=workers,
                           progress=None if args.quiet else print,
                           backend=backend, trace=args.trace,
-                          verbose=args.verbose)
+                          verbose=args.verbose, searcher=args.searcher,
+                          searcher_config=parse_searcher_config(
+                              args.searcher_config))
     front = print_report(report, weights, args.top)
 
     if args.frontier_json:

@@ -511,6 +511,34 @@ def health_section(records: Sequence[Mapping],
                       "(converged or exhaustive) — the iteration budget "
                       "was sufficient.", ""]
 
+        by_engine: dict[str, list[Mapping]] = {}
+        for r in traced:
+            t = r["trace"]
+            by_engine.setdefault(str(t.get("engine", "?")), []).append(t)
+        lines += [f"### Per-engine convergence ({len(by_engine)} engine(s) "
+                  f"across the traced cells)", ""]
+        rows = []
+        for eng in sorted(by_engine):
+            ts = by_engine[eng]
+            stops: dict[str, int] = {}
+            for t in ts:
+                s = str(t.get("stop_reason", "?"))
+                stops[s] = stops.get(s, 0) + 1
+            stop_s = ", ".join(f"{s}×{n}" for s, n in sorted(stops.items()))
+            evals = sum(int(t.get("evaluations", 0)) for t in ts)
+            screened = sum(int(t.get("screened", 0)) for t in ts)
+            iters = sum(int(t.get("iterations", 0)) for t in ts) / len(ts)
+            fits = [t["best_fitness"] for t in ts if "best_fitness" in t]
+            rows.append([f"`{eng}`", len(ts), stop_s, f"{iters:.1f}",
+                         evals, screened if screened else "—",
+                         _fmt(max(fits)) if fits else "—"])
+        lines += _table(["engine", "cells", "stop reasons", "mean iters",
+                         "evals", "screened", "best fitness"], rows)
+        lines += ["", "_`screened` counts candidates a multi-fidelity "
+                      "engine triaged through the cheap vectorized "
+                      "relaxation; they never touch the full analytical "
+                      "models and are not part of `evals`._", ""]
+
     if not events and not traced:
         lines += ["_No telemetry: the store records carry no `trace` field "
                   "and no events file was found. Re-run the campaign with "
@@ -577,8 +605,11 @@ def fixture_records() -> list[dict]:
             in enumerate(fpga_pts):
         size = f"{h}x{h}" if h else "native"
         # one deliberately iteration-capped cell (index 0) so health
-        # reports exercise the "still improving at the cap" flag
+        # reports exercise the "still improving at the cap" flag; one
+        # multi-fidelity cell (index 2) so the per-engine table shows a
+        # `screened` count alongside the paper's PSO
         capped = i == 0
+        hyperband = i == 2
         recs.append({
             "schema": 1,
             "cell_key": f"net={net}|in={size}|fpga={fpga}|prec=16|bmax=1",
@@ -593,14 +624,17 @@ def fixture_records() -> list[dict]:
                        "weights": None},
             "evaluations": 600,
             "trace": {
-                "schema": 1, "engine": "pso",
+                "schema": 1,
+                "engine": "hyperband" if hyperband else "pso",
                 "stop_reason": "iteration_cap" if capped else "converged",
                 "iterations": 30 if capped else 10 + i,
-                "evaluations": 600, "cache_hits": 40 + 7 * i,
+                "evaluations": 130 if hyperband else 600,
+                "cache_hits": 40 + 7 * i,
                 "best_fitness": ips,
                 "final_delta": 1.25 if capped else 0.0,
                 "history": [round(ips * f, 6)
                             for f in (0.82, 0.97, 1.0)],
+                **({"screened": 4096} if hyperband else {}),
             },
         })
     tpu_pts = [  # (arch, shape, chips, remat, mb, dp, tp, step, mfu, hbm, ok)
@@ -753,7 +787,7 @@ def main(argv: list[str] | None = None) -> int:
                      "Backend champions", "Campaign health",
                      "Wall-time breakdown", "Worker utilization",
                      "Slowest cells", "Convergence diagnostics",
-                     "iteration cap"):
+                     "Per-engine convergence", "iteration cap"):
             if must not in md:
                 raise SystemExit(f"selftest: section {must!r} missing "
                                  f"from rendered report")

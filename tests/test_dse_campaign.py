@@ -241,6 +241,26 @@ def test_campaign_workers_match_serial(tmp_path):
         assert a["evaluations"] == b["evaluations"]
 
 
+def test_campaign_store_deterministic_across_worker_counts(tmp_path):
+    """Same seed, --workers 1 vs --workers 2: the stores are byte-identical
+    modulo record order — pool scheduling may only reorder appends, never
+    change a record. Wall-clock (``search_time_s``) is the one volatile
+    field and is stripped before comparing."""
+    cells = _small_cells()
+    run_campaign(cells, str(tmp_path / "w1.jsonl"), base_seed=7, **_FAST)
+    run_campaign(cells, str(tmp_path / "w2.jsonl"), base_seed=7, workers=2,
+                 **_FAST)
+
+    def canonical(path):
+        lines = []
+        for rec in ResultStore(path):
+            rec.pop("search_time_s", None)
+            lines.append(json.dumps(rec, sort_keys=True))
+        return sorted(lines)
+
+    assert canonical(tmp_path / "w1.jsonl") == canonical(tmp_path / "w2.jsonl")
+
+
 def test_run_cell_record_schema(tmp_path):
     cell = CampaignCell("vgg16", 64, 64, "zc706", 16, 1)
     rec = run_cell(cell, **_FAST)

@@ -1,0 +1,163 @@
+"""Property-based invariant tests for :mod:`repro.dse.pareto`, using
+seeded randomized sweeps (no extra dependencies): every property is
+checked against many generated vector sets, including degenerate axes,
+duplicates, and single-point fronts, with the failing seed in the
+assertion message so any counterexample replays deterministically.
+
+The front oracle is an independent re-implementation (set semantics over
+pairwise tuple comparison) so the test does not share code — or bugs —
+with ``non_dominated``.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.dse.pareto import (crowding_distance, diverse_front, dominates,
+                              non_dominated, nondominated_sort, pareto_front,
+                              select_diverse)
+
+SEEDS = range(12)
+
+
+def _vectors(seed: int) -> list[tuple[float, ...]]:
+    """A randomized objective set: dimension 2-4, size 1-60, values
+    quantized so duplicates and ties actually occur, occasionally with a
+    degenerate (constant) axis."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 61))
+    dim = int(rng.integers(2, 5))
+    vals = rng.integers(0, 8, size=(n, dim)).astype(float)
+    if rng.random() < 0.3:
+        vals[:, int(rng.integers(0, dim))] = 3.0  # degenerate objective
+    if n > 3:  # force exact duplicates
+        vals[1] = vals[0]
+    return [tuple(row) for row in vals]
+
+
+def _oracle_front(vectors) -> set:
+    """Brute-force O(n^2) oracle, written independently: i is on the
+    front iff no j is >= everywhere and > somewhere."""
+    out = set()
+    for i, v in enumerate(vectors):
+        dominated = False
+        for j, u in enumerate(vectors):
+            if j == i:
+                continue
+            if all(uk >= vk for uk, vk in zip(u, v)) and tuple(u) != tuple(v):
+                dominated = True
+                break
+        if not dominated:
+            out.add(i)
+    return out
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_front_matches_bruteforce_oracle(seed):
+    vecs = _vectors(seed)
+    got = non_dominated(vecs)
+    assert got == sorted(got), f"seed={seed}: front not in input order"
+    assert set(got) == _oracle_front(vecs), f"seed={seed}"
+    assert [vecs[i] for i in got] == pareto_front(vecs, vecs), f"seed={seed}"
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_dominance_axioms(seed):
+    """Irreflexivity, antisymmetry, and transitivity on sampled pairs and
+    triples."""
+    vecs = _vectors(seed)
+    rng = np.random.default_rng(1000 + seed)
+    idx = rng.integers(0, len(vecs), size=(60, 3))
+    for a, b, c in idx:
+        va, vb, vc = vecs[a], vecs[b], vecs[c]
+        assert not dominates(va, va), f"seed={seed}: reflexive {va}"
+        if dominates(va, vb):
+            assert not dominates(vb, va), \
+                f"seed={seed}: antisymmetry {va} {vb}"
+            if dominates(vb, vc):
+                assert dominates(va, vc), \
+                    f"seed={seed}: transitivity {va} {vb} {vc}"
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_nondominated_sort_partitions(seed):
+    """Every index lands in exactly one front, front 0 is THE front, and
+    each later front is non-dominated once earlier fronts are removed."""
+    vecs = _vectors(seed)
+    fronts = nondominated_sort(vecs)
+    flat = [i for f in fronts for i in f]
+    assert sorted(flat) == list(range(len(vecs))), f"seed={seed}"
+    assert set(fronts[0]) == _oracle_front(vecs), f"seed={seed}"
+    remaining = list(range(len(vecs)))
+    for front in fronts:
+        sub = [vecs[i] for i in remaining]
+        want = {remaining[j] for j in _oracle_front(sub)}
+        assert set(front) == want, f"seed={seed}"
+        remaining = [i for i in remaining if i not in want]
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_crowding_boundary_points_infinite(seed):
+    """Vectors extreme in any non-degenerate objective get inf distance;
+    everyone else gets a finite non-negative credit."""
+    vecs = _vectors(seed)
+    dist = crowding_distance(vecs)
+    assert len(dist) == len(vecs), f"seed={seed}"
+    if len(vecs) == 1:
+        assert dist == [math.inf]
+        return
+    for d in range(len(vecs[0])):
+        col = [v[d] for v in vecs]
+        lo, hi = min(col), max(col)
+        if lo == hi:
+            continue  # degenerate axis contributes nothing
+        # sorted() is stable, so among ties for the minimum the FIRST
+        # input index sorts to position 0, and among ties for the
+        # maximum the LAST input index sorts to position -1 — those are
+        # the boundary slots credited inf
+        first_lo = min(i for i in range(len(col)) if col[i] == lo)
+        last_hi = max(i for i in range(len(col)) if col[i] == hi)
+        assert dist[first_lo] == math.inf, f"seed={seed} d={d}"
+        assert dist[last_hi] == math.inf, f"seed={seed} d={d}"
+    assert all(x >= 0.0 for x in dist), f"seed={seed}"
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_select_diverse_subset_and_deterministic(seed):
+    """select_diverse(k): exactly min(k, n) distinct indices; with k no
+    larger than the first front it returns ONLY first-front members; and
+    it is a pure deterministic function of its input."""
+    vecs = _vectors(seed)
+    front = set(non_dominated(vecs))
+    for k in (0, 1, len(front), len(vecs), len(vecs) + 5):
+        sel = select_diverse(vecs, k)
+        assert len(sel) == min(k, len(vecs)), f"seed={seed} k={k}"
+        assert len(set(sel)) == len(sel), f"seed={seed} k={k}: dupes"
+        if 0 < k <= len(front):
+            assert set(sel) <= front, f"seed={seed} k={k}"
+        assert sel == select_diverse(list(vecs), k), \
+            f"seed={seed} k={k}: non-deterministic"
+    # full selection is a permutation, whole fronts in rank order
+    sel = select_diverse(vecs, len(vecs))
+    assert sorted(sel) == list(range(len(vecs))), f"seed={seed}"
+    rank = {}
+    for ri, f in enumerate(nondominated_sort(vecs)):
+        for i in f:
+            rank[i] = ri
+    assert [rank[i] for i in sel] == sorted(rank[i] for i in sel), \
+        f"seed={seed}: fronts interleaved"
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_diverse_front_is_crowding_ordered_first_front(seed):
+    """diverse_front == the first front reordered (extremes first), never
+    reaching into later fronts even when truncated."""
+    vecs = _vectors(seed)
+    front = set(non_dominated(vecs))
+    full = diverse_front(vecs)
+    assert set(full) == front, f"seed={seed}"
+    for k in (1, 2, len(front)):
+        cut = diverse_front(vecs, k)
+        assert len(cut) == min(k, len(front)), f"seed={seed} k={k}"
+        assert set(cut) <= front, f"seed={seed} k={k}"
+        assert cut == full[:len(cut)], f"seed={seed} k={k}: order drifts"

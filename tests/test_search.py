@@ -1,0 +1,159 @@
+"""Searcher-protocol tests: golden PSO trajectories (bit-identity with
+the pre-refactor implementation), cross-engine conformance over every
+registered searcher, and the registry's config plumbing.
+
+The golden fixture (``tests/data/pso_golden.json``) was captured from
+the monolithic ``pso.optimize`` BEFORE the ask/tell refactor; the
+refactored ``PSOSearcher`` + ``run_search`` must reproduce it exactly —
+discrete fields bit-identical, floats to 1e-9 relative. Regenerate the
+fixture only on an intentional algorithm change.
+"""
+import json
+import math
+from pathlib import Path
+
+import pytest
+
+from repro.core import PSOConfig, explore
+from repro.core.hw_specs import FPGAS
+from repro.core.netinfo import vgg16
+from repro.core.search import (SEARCHERS, SearchSpace, make_searcher,
+                               searcher_names)
+from repro.dse.campaign import expand_cells, run_cell
+from repro.dse.store import ResultStore
+
+GOLDEN = Path(__file__).parent / "data" / "pso_golden.json"
+
+
+def _golden_cases():
+    with GOLDEN.open() as f:
+        return json.load(f)["cases"]
+
+
+@pytest.mark.parametrize("case", _golden_cases(),
+                         ids=lambda c: f"seed{c['seed']}_{c['fpga']}")
+def test_pso_golden_trajectory(case):
+    """The refactored PSOSearcher replays pre-refactor trajectories
+    bit-for-bit: same RNG draw order, same dedup/memo behavior, same
+    stop reason."""
+    net = vgg16(case["input"])
+    cfg = PSOConfig(population=case["population"],
+                    iterations=case["iterations"],
+                    patience=case["patience"], seed=case["seed"])
+    res = explore(net, FPGAS[case["fpga"]], dw=case["dw"], ww=case["ww"],
+                  batch_max=case["batch_max"], cfg=cfg).pso
+
+    assert res.best_rav.sp == case["best_rav"][0]
+    assert res.best_rav.batch == case["best_rav"][1]
+    for got, want in zip((res.best_rav.dsp_frac, res.best_rav.bram_frac,
+                          res.best_rav.bw_frac), case["best_rav"][2:]):
+        assert math.isclose(got, want, rel_tol=1e-9), (got, want)
+    assert math.isclose(res.best_fitness, case["best_fitness"],
+                        rel_tol=1e-9)
+    assert res.iterations_run == case["iterations_run"]
+    assert res.evaluations == case["evaluations"]
+    assert res.cache_hits == case["cache_hits"]
+    assert res.stop_reason == case["stop_reason"]
+    assert len(res.history) == len(case["history"])
+    for got, want in zip(res.history, case["history"]):
+        assert math.isclose(got, want, rel_tol=1e-9), (got, want)
+
+
+# ---------------------------------------------------------------------------
+# cross-searcher conformance: every registered engine honors the protocol
+# ---------------------------------------------------------------------------
+
+
+_NET = vgg16(64)
+_FPGA = FPGAS["zc706"]
+_BMAX = 2
+# tiny budgets so hyperband's screen rung stays cheap under pytest
+_OVERRIDES = {"hyperband": {"screen": 256, "survivors": 4}}
+
+
+def _run(name, seed=5):
+    cfg = PSOConfig(population=6, iterations=5, patience=2, seed=seed)
+    return explore(_NET, _FPGA, batch_max=_BMAX, cfg=cfg, searcher=name,
+                   searcher_config=_OVERRIDES.get(name))
+
+
+@pytest.mark.parametrize("name", searcher_names())
+def test_searcher_conformance(name):
+    """Every engine returns a bounds-valid best RAV, stays within its own
+    declared evaluation cap, reports a stop reason, and is deterministic
+    under a fixed seed."""
+    res = _run(name)
+    p = res.pso
+    sp_max = len(_NET.major_layers)
+
+    r = res.design.rav
+    assert 0 <= r.sp <= sp_max
+    assert 1 <= r.batch <= _BMAX
+    for frac in (r.dsp_frac, r.bram_frac, r.bw_frac):
+        assert 0.05 <= frac <= 0.95
+
+    space = SearchSpace(sp_max=sp_max, batch_max=_BMAX)
+    engine = make_searcher(
+        name, space,
+        base=dict(population=6, iterations=5, patience=2, seed=5),
+        overrides=_OVERRIDES.get(name))
+    assert p.evaluations <= engine.eval_cap(), \
+        f"{name}: {p.evaluations} full evals > declared cap"
+
+    assert p.engine == name
+    assert p.stop_reason in ("converged", "iteration_cap")
+    assert p.iterations_run >= 0
+    assert len(p.history) >= 1
+    assert math.isclose(p.history[-1], p.best_fitness, rel_tol=1e-9)
+    # histories are monotone: each entry is the best-so-far
+    assert all(b >= a - 1e-12 for a, b in zip(p.history, p.history[1:]))
+
+    again = _run(name).pso
+    assert again.best_fitness == p.best_fitness
+    assert again.history == p.history
+    assert again.evaluations == p.evaluations
+
+
+@pytest.mark.parametrize("name", searcher_names())
+def test_searcher_store_roundtrip(name, tmp_path):
+    """A campaign record produced under any engine survives the JSONL
+    store round trip with its convergence trace intact."""
+    cell = expand_cells(["vgg16"], [(64, 64)], ["zc706"], [16], [_BMAX])[0]
+    rec = run_cell(cell, base_seed=5, population=6, iterations=5,
+                   searcher=name, searcher_config=_OVERRIDES.get(name))
+    assert rec["trace"]["engine"] == name
+    if name == "hyperband":
+        assert rec["trace"]["screened"] > 0
+
+    store = ResultStore(tmp_path / "s.jsonl")
+    store.put(rec)
+    back = ResultStore(tmp_path / "s.jsonl").get(cell.key)
+    assert back is not None
+    assert back["trace"] == rec["trace"]
+    assert back["search"] == rec["search"]
+    # engine identity is part of the resume-match config exactly when
+    # it differs from the default paper flow
+    if name == "pso":
+        assert "searcher" not in back["search"]
+    else:
+        assert back["search"]["searcher"] == name
+
+
+def test_registry_and_config_plumbing():
+    names = searcher_names()
+    for expected in ("pso", "random", "anneal", "hyperband"):
+        assert expected in names
+    assert set(names) == set(SEARCHERS)
+
+    space = SearchSpace(sp_max=10, batch_max=2)
+    with pytest.raises(ValueError):
+        make_searcher("no_such_engine", space)
+    with pytest.raises(ValueError):
+        make_searcher("pso", space, overrides={"bogus_field": 1})
+    # base keys an engine doesn't have are dropped; overrides coerce to
+    # the config field's type
+    eng = make_searcher("anneal", space,
+                        base=dict(population=4, inertia=0.7),
+                        overrides={"t0": "0.1"})
+    assert eng.cfg.population == 4
+    assert eng.cfg.t0 == 0.1
