@@ -368,7 +368,7 @@ def bench_placement() -> list[dict]:
     from repro.dse import run_campaign
     from repro.dse.backends import get_backend
     from repro.dse.placement import place, pooled_records
-    from repro.dse.store import ResultStore
+    from repro.dse.store import open_store
 
     archs = ["starcoder2-3b", "xlstm-350m"]
     shapes = ["train_4k", "decode_32k"]
@@ -383,7 +383,7 @@ def bench_placement() -> list[dict]:
             microbatches=(1,))
         _, us_tpu = _timed(run_campaign, tpu_cells, store, backend="tpu")
         _, us_cuda = _timed(run_campaign, cuda_cells, store, backend="cuda")
-        records = pooled_records([ResultStore(store)])
+        records = pooled_records([open_store(store)])
         workloads = [f"{a}/{s}" for a in archs for s in shapes]
         budget = CostEnvelope(usd_per_hour=150.0, watts=40000.0)
         exact, us_exact = _timed(place, workloads, records, budget,
@@ -404,6 +404,110 @@ def bench_placement() -> list[dict]:
                     f"greedy_matches_exact={agree}")}]
 
 
+def bench_campaign_100k() -> list[dict]:
+    """Store v2 + FrontierIndex at report scale: 100k synthetic records
+    bulk-written to a sharded store, then ONE streaming pass (offset
+    index + iter_records + incremental frontier) timed against the full
+    non-dominated re-sort the report historically ran per render. The
+    re-sort is O(n^2) python — measured on a subsample and extrapolated
+    quadratically (running it straight at 100k would take hours)."""
+    import tempfile
+
+    import numpy as np
+
+    from repro.dse.frontier import FrontierIndex
+    from repro.dse.pareto import non_dominated
+    from repro.dse.store import open_store, shard_name, sharded_dir_for
+
+    n, sub = 100_000, 800
+    rng = np.random.default_rng(0)
+    vals = rng.random((n, 3))
+    with tempfile.TemporaryDirectory() as td:
+        store_path = f"{td}/bench100k.d"
+        d = sharded_dir_for(store_path)
+        d.mkdir(parents=True)
+        (d / "manifest.json").write_text(
+            json.dumps({"store_format": 2}) + "\n")
+        # bulk append, the shape a campaign worker's shard ends up in
+        # (puts go through the same append path, plus fsync per record)
+        with open(d / shard_name(0), "w") as f:
+            for i in range(n):
+                f.write(json.dumps(
+                    {"cell_key": f"c{i}",
+                     "objectives": {"a": vals[i, 0], "b": vals[i, 1],
+                                    "c": vals[i, 2], "feasible": True}},
+                    sort_keys=True) + "\n")
+
+        def streaming_pass():
+            s = open_store(store_path)
+            fi = FrontierIndex()
+            for rec in s.iter_records():
+                o = rec["objectives"]
+                fi.insert(rec["cell_key"], (o["a"], o["b"], o["c"]))
+            return fi
+
+        fi, us_stream = _timed(streaming_pass)
+    sub_vecs = [tuple(v) for v in vals[:sub]]
+    _, us_sub = _timed(non_dominated, sub_vecs)
+    us_resort_est = us_sub * (n / sub) ** 2
+    speedup = us_resort_est / us_stream
+    return [{
+        "name": "campaign_100k_synthetic",
+        "us_per_call": us_stream,
+        "derived": (f"records={len(fi)};front={fi.front_size()};"
+                    f"stream_us={us_stream:.0f};"
+                    f"resort_est_us={us_resort_est:.0f};"
+                    f"speedup={speedup:.0f}x;ge5x={speedup >= 5.0}")}]
+
+
+def bench_screen_cells_jax() -> list[dict]:
+    """Cross-cell jax screening vs the per-cell NumPy reference: one
+    jitted (cells x n) call against a python loop of screen_rav_batch.
+    Emits a skip row when jax is absent (the CI bench runner) — the
+    row is one-sided there and never gates."""
+    from repro.core import screen_jax
+
+    if not screen_jax.available():
+        return [{"name": "screen_cells_jax", "us_per_call": 0.0,
+                 "derived": "skipped=jax_unavailable"}]
+    import numpy as np
+
+    from repro.core.batch_eval import screen_rav_batch
+    from repro.core.hw_specs import FPGAS
+    from repro.core.search import SearchSpace
+    from repro.dse.campaign import build_net
+
+    cases = [("vgg16", h, w, fp, prec)
+             for h, w in ((128, 128), (224, 224), (320, 320))
+             for fp in ("ku115", "zcu102", "vu9p", "zc706")
+             for prec in (16, 8)]
+    n = 4096
+    rng = np.random.default_rng(0)
+    nets = [build_net(c[0], c[1], c[2]) for c in cases]
+    tables = [screen_jax.cell_tables(net, FPGAS[c[3]], c[4], c[4])
+              for net, c in zip(nets, cases)]
+    blocks = np.stack([
+        rng.uniform(sp.lo(), sp.hi(), size=(n, 5))
+        for sp in (SearchSpace(sp_max=len(net.major_layers), batch_max=8)
+                   for net in nets)])
+    stacked = screen_jax.stack_cells(tables)
+
+    def numpy_loop():
+        return [screen_rav_batch(net, FPGAS[c[3]], blk, c[4], c[4])
+                for net, c, blk in zip(nets, cases, blocks)]
+
+    ref, us_np = _timed(numpy_loop)
+    screen_jax.screen_cells(stacked, blocks)       # compile warmup
+    out, us_jax = _timed(screen_jax.screen_cells, stacked, blocks)
+    exact = all(np.array_equal(out[i], r) for i, r in enumerate(ref))
+    return [{
+        "name": f"screen_cells_jax_{len(cases)}x{n}",
+        "us_per_call": us_jax,
+        "derived": (f"cells={len(cases)};n={n};numpy_us={us_np:.0f};"
+                    f"jax_us={us_jax:.0f};"
+                    f"speedup={us_np / us_jax:.1f}x;bit_equal={exact}")}]
+
+
 BENCHES = {
     "fig1": bench_fig1_ctc,
     "table1": bench_table1_variance,
@@ -418,6 +522,8 @@ BENCHES = {
     "campaign_tpu": bench_tpu_campaign,
     "campaign_cuda": bench_cuda_campaign,
     "campaign_placement": bench_placement,
+    "campaign_100k": bench_campaign_100k,
+    "screen_jax": bench_screen_cells_jax,
     "roofline": bench_roofline,
 }
 

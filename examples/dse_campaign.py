@@ -19,7 +19,7 @@ from repro.dse import (NORMALIZED_OBJECTIVES, Objectives, canonical_vector,
                        diverse_front, render_report, run_campaign)
 from repro.dse.backends import get_backend
 from repro.dse.campaign import expand_cells
-from repro.dse.store import ResultStore
+from repro.dse.store import open_store
 
 
 def main():
@@ -78,7 +78,7 @@ def main():
 
     # Cross-backend frontier: every record normalized to the shared
     # (tflops, /W, /$, /peak) schema, one dominance sort over all of it.
-    records = ResultStore(store).records()
+    records = list(open_store(store).iter_records())
     norm = [(r, get_backend(r.get("backend", "fpga")).normalized(r))
             for r in records]
     norm = [(r, n) for r, n in norm if n["feasible"]]

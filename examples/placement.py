@@ -22,7 +22,7 @@ from repro.dse.backends import get_backend
 from repro.dse.placement import (candidates_by_workload, ensure_coverage,
                                  place, pooled_records)
 from repro.dse.report import render_placement
-from repro.dse.store import ResultStore
+from repro.dse.store import open_store
 
 
 def show(result):
@@ -54,7 +54,7 @@ def main():
                                    gpu_types=("a100-80g", "h100"),
                                    remats=("full",), microbatches=(1,)),
                  store_path, backend="cuda")
-    records = pooled_records([ResultStore(store_path)])
+    records = pooled_records([open_store(store_path)])
     print(f"== store: {len(records)} cells across tpu+cuda ==")
 
     # 2. loose budget: every workload gets its best design.
@@ -72,8 +72,8 @@ def main():
     # 4. coverage fallback: decode_32k was never swept — fill it with the
     #    backends' default coverage cells, then place the widened mix.
     wider = workloads + ["xlstm-350m/decode_32k"]
-    store = ResultStore(store_path)
-    known = candidates_by_workload(store.records(), "tflops")
+    store = open_store(store_path)
+    known = candidates_by_workload(store.iter_records(), "tflops")
     filled = ensure_coverage(wider, store, known)
     print(f"\n== coverage fallback evaluated: {filled} ==")
     full = place(wider, pooled_records([store]),

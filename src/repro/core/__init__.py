@@ -13,13 +13,15 @@ from .netinfo import INPUT_CASES, TABLE1_NETS, LayerInfo, NetInfo, vgg16
 from .pipeline_model import PipelineDesign, StageDesign, design_pipeline
 from .pso import PSOConfig, PSOResult, optimize
 from .search import (SearchResult, Searcher, SearchSpace, SEARCHERS,
-                     make_searcher, run_search, searcher_names)
+                     hyperband_rung0, make_searcher, run_search,
+                     searcher_config_for, searcher_names)
 
 __all__ = [
     "ExplorationResult", "explore", "GenericDesign", "best_generic",
     "evaluate_rav_batch", "screen_rav_batch", "PackedLayers", "pack_layers",
     "SearchResult", "Searcher", "SearchSpace", "SEARCHERS",
-    "make_searcher", "run_search", "searcher_names",
+    "hyperband_rung0", "make_searcher", "run_search",
+    "searcher_config_for", "searcher_names",
     "A100_40G", "A100_80G", "FPGAS", "GPUS", "H100", "KU115", "TPU_V5E",
     "TPUS", "VU9P", "ZC706", "ZCU102", "FPGASpec", "GPUSpec", "TPUSpec",
     "RAV", "DesignPoint", "dnnbuilder_design",

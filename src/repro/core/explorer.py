@@ -86,6 +86,7 @@ def explore(net: NetInfo, fpga: FPGASpec, dw: int = 16, ww: int = 16,
             batch_max: int = 1, cfg: PSOConfig | None = None,
             objective: Callable[[DesignPoint], float] | None = None,
             searcher: str = "pso", searcher_config: dict | None = None,
+            screen_fits: np.ndarray | None = None,
             ) -> ExplorationResult:
     """Run the full DNNExplorer flow for one (DNN, FPGA) pair.
 
@@ -111,6 +112,17 @@ def explore(net: NetInfo, fpga: FPGASpec, dw: int = 16, ww: int = 16,
     winning RAV is re-evaluated once through the scalar reference path
     (:func:`~repro.core.local_opt.evaluate_rav`), so the returned
     design always comes from the reference implementation.
+
+    ``screen_fits`` optionally supplies the FIRST screen-fidelity
+    block's fitnesses, precomputed by the campaign-level cross-cell jax
+    screen (:mod:`repro.core.screen_jax`): the engine's opening rung-0
+    ask is served from it (lengths must match — a config drift falls
+    back to the NumPy screen) and every later screen call goes through
+    :func:`~repro.core.batch_eval.screen_rav_batch` as usual. Because
+    the jax kernel is bit-identical to the NumPy reference and
+    :func:`repro.core.search.hyperband_rung0` makes the asked positions
+    deterministic, serving precomputed fitnesses leaves the search
+    trajectory unchanged.
     """
     t0 = time.perf_counter()
     sp_max = len(net.major_layers)
@@ -121,11 +133,17 @@ def explore(net: NetInfo, fpga: FPGASpec, dw: int = 16, ww: int = 16,
         """Whole-population fitness: one batched-engine call per step."""
         return [obj(d) for d in evaluate_rav_batch(net, fpga, ravs, dw, ww)]
 
+    pre = ([np.asarray(screen_fits, dtype=float)]
+           if screen_fits is not None else [])
+
     def screen(block: np.ndarray) -> np.ndarray:
         """Cheap-fidelity triage over a raw position block: relaxed
         throughput, NOT ``objective`` — multi-fidelity engines rank
         rungs on it, then score survivors with the true objective at
-        full fidelity."""
+        full fidelity. A precomputed ``screen_fits`` serves the first
+        matching block once; everything else hits the NumPy screen."""
+        if pre and len(block) == len(pre[0]):
+            return pre.pop()
         return screen_rav_batch(net, fpga, block, dw, ww)
 
     space = SearchSpace(sp_max=sp_max, batch_max=batch_max)

@@ -231,9 +231,13 @@ def searcher_names() -> list[str]:
     return sorted(SEARCHERS)
 
 
-def make_searcher(name: str, space: SearchSpace, *, base: dict | None = None,
-                  overrides: dict | None = None) -> Searcher:
-    """Instantiate a registered engine.
+def searcher_config_for(name: str, *, base: dict | None = None,
+                        overrides: dict | None = None):
+    """Build a registered engine's config instance — the exact object
+    :func:`make_searcher` would hand its searcher, factored out so
+    campaign-level precomputation (e.g. the cross-cell jax screen, which
+    must reproduce each cell's hyperband config bit-for-bit) shares one
+    construction path with the search itself.
 
     ``base`` carries the campaign-level knobs every engine understands
     (``population``, ``iterations``, ``patience``, ``seed``) — keys the
@@ -244,7 +248,7 @@ def make_searcher(name: str, space: SearchSpace, *, base: dict | None = None,
     if name not in SEARCHERS:
         raise ValueError(f"unknown searcher {name!r}; "
                          f"registered: {', '.join(sorted(SEARCHERS))}")
-    searcher_cls, config_cls = SEARCHERS[name]
+    _, config_cls = SEARCHERS[name]
     fields = {f.name: f for f in dataclasses.fields(config_cls)}
     kw = {k: v for k, v in (base or {}).items() if k in fields}
     for k, v in (overrides or {}).items():
@@ -255,7 +259,16 @@ def make_searcher(name: str, space: SearchSpace, *, base: dict | None = None,
         # Coerce to the field's default's type so "--searcher-config
         # screen=512" (a string from the CLI) lands as the right kind.
         kw[k] = type(fields[k].default)(v)
-    return searcher_cls(space, config_cls(**kw))
+    return config_cls(**kw)
+
+
+def make_searcher(name: str, space: SearchSpace, *, base: dict | None = None,
+                  overrides: dict | None = None) -> Searcher:
+    """Instantiate a registered engine (see :func:`searcher_config_for`
+    for how ``base`` and ``overrides`` assemble its config)."""
+    cfg = searcher_config_for(name, base=base, overrides=overrides)
+    searcher_cls, _ = SEARCHERS[name]
+    return searcher_cls(space, cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -429,6 +442,22 @@ class HyperbandConfig:
         return self.survivors + 3 + self.population * (self.iterations + 1)
 
 
+def hyperband_rung0(space: SearchSpace, cfg: "HyperbandConfig") -> np.ndarray:
+    """The exact ``(screen, 5)`` rung-0 block a
+    :class:`HyperbandSearcher` with this config will ask to have
+    screened: ``cfg.screen`` uniform draws from a fresh
+    ``default_rng(cfg.seed)`` with the canonical three planted at the
+    top. Factored out so the campaign-level cross-cell jax screen
+    (:mod:`repro.core.screen_jax`) can precompute every cell's rung-0
+    fitnesses in one jitted call and hand them back to the searcher —
+    bit-identical positions are what makes that handoff sound."""
+    rng = np.random.default_rng(cfg.seed)
+    pos = rng.uniform(space.lo(), space.hi(), size=(cfg.screen, 5))
+    can = space.canonical()
+    pos[:len(can)] = can
+    return pos
+
+
 class HyperbandSearcher(Searcher):
     """Successive-halving multi-fidelity search.
 
@@ -450,7 +479,6 @@ class HyperbandSearcher(Searcher):
 
     def __init__(self, space: SearchSpace, cfg: HyperbandConfig):
         super().__init__(space, cfg)
-        self._rng = np.random.default_rng(cfg.seed)
         self._phase = "screen"
         self._inner = None
         self._promoted: np.ndarray | None = None
@@ -459,12 +487,8 @@ class HyperbandSearcher(Searcher):
         if self.done:
             return None
         if self._phase == "screen":
-            pos = self._rng.uniform(self.space.lo(), self.space.hi(),
-                                    size=(self.cfg.screen, 5))
-            can = self.space.canonical()
-            pos[:len(can)] = can
-            self._pos = pos
-            return pos
+            self._pos = hyperband_rung0(self.space, self.cfg)
+            return self._pos
         if self._phase == "promote":
             return self._promoted
         return self._inner.ask()    # refine: delegate to the seeded PSO

@@ -80,16 +80,18 @@ from .objectives import (NORMALIZED_DEFAULT_WEIGHTS, NORMALIZED_OBJECTIVES,
                          OBJECTIVES, ObjectiveSpec, Objectives,
                          canonical_vector, normalized_throughput,
                          scalarize_values, scalarized_objective)
-from .pareto import (crowding_distance, diverse_front, dominates,
-                     non_dominated, nondominated_sort, pareto_front,
-                     select_diverse)
-from .store import ResultStore, rav_hash
+from .frontier import FrontierIndex
+from .pareto import (crowding_distance, diverse_front, dominance_split,
+                     dominates, non_dominated, nondominated_sort,
+                     pareto_front, select_diverse)
 
-# Campaign/backend/report exports resolve lazily (PEP 562) so
-# `python -m repro.dse.campaign` / `python -m repro.dse.report` don't
-# import their module twice (runpy's found-in-sys.modules warning).
+# Campaign/backend/report/store exports resolve lazily (PEP 562) so
+# `python -m repro.dse.campaign` / `python -m repro.dse.report` /
+# `python -m repro.dse.store` don't import their module twice (runpy's
+# found-in-sys.modules warning).
 _CAMPAIGN_EXPORTS = ("CampaignCell", "CampaignReport", "cell_seed",
-                     "expand_cells", "run_campaign", "run_cell")
+                     "expand_cells", "prescreen_cells_jax", "run_campaign",
+                     "run_cell")
 _BACKEND_EXPORTS = ("BACKENDS", "Backend", "CUDABackend", "CUDACell",
                     "FPGABackend", "GPU_OBJECTIVES", "TPUBackend",
                     "TPUCell", "TPU_OBJECTIVES", "get_backend",
@@ -97,6 +99,7 @@ _BACKEND_EXPORTS = ("BACKENDS", "Backend", "CUDABackend", "CUDACell",
 _REPORT_EXPORTS = ("fixture_events", "fixture_records", "health_section",
                    "render_compare", "render_placement", "render_report")
 _OBS_EXPORTS = ("events_for_store", "example_health_md")
+_STORE_EXPORTS = ("CampaignStore", "ResultStore", "open_store", "rav_hash")
 _PLACEMENT_EXPORTS = ("Assignment", "BudgetInfeasibleError", "Candidate",
                       "CoverageError", "PlacementError", "PlacementResult",
                       "candidates_by_workload", "ensure_coverage",
@@ -109,8 +112,9 @@ __all__ = [
     "NORMALIZED_DEFAULT_WEIGHTS", "NORMALIZED_OBJECTIVES",
     "OBJECTIVES", "ObjectiveSpec", "Objectives", "canonical_vector",
     "normalized_throughput", "scalarize_values", "scalarized_objective",
-    "crowding_distance", "diverse_front", "dominates", "non_dominated",
-    "nondominated_sort", "pareto_front", "select_diverse", "ResultStore",
+    "crowding_distance", "diverse_front", "dominance_split", "dominates",
+    "non_dominated", "nondominated_sort", "pareto_front", "select_diverse",
+    "CampaignStore", "FrontierIndex", "ResultStore", "open_store",
     "rav_hash",
 ]
 
@@ -131,4 +135,7 @@ def __getattr__(name: str):
     if name in _OBS_EXPORTS:
         from . import obs
         return getattr(obs, name)
+    if name in _STORE_EXPORTS:
+        from . import store
+        return getattr(store, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

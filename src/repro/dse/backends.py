@@ -292,10 +292,11 @@ class FPGABackend(Backend):
         return expand_cells(nets, inputs, fpgas, precisions, batch_caps)
 
     def run_cell(self, cell, *, base_seed=0, population=20, iterations=30,
-                 weights=None, searcher="pso", searcher_config=None) -> dict:
+                 weights=None, searcher="pso", searcher_config=None,
+                 screen_fits=None) -> dict:
         from .campaign import run_cell
         return run_cell(cell, base_seed, population, iterations, weights,
-                        searcher, searcher_config)
+                        searcher, searcher_config, screen_fits)
 
     def search_config(self, *, base_seed, population, iterations,
                       weights, searcher="pso", searcher_config=None) -> dict:
@@ -926,7 +927,8 @@ def run_cell_by_backend(backend_name: str, cell, base_seed: int,
                         weights: Mapping[str, float] | None,
                         obs: Mapping | None = None,
                         searcher: str = "pso",
-                        searcher_config: Mapping | None = None) -> dict:
+                        searcher_config: Mapping | None = None,
+                        screen_fits=None) -> dict:
     """Top-level (picklable) pool entry point: resolve the backend by name
     in the worker and evaluate one cell.
 
@@ -936,13 +938,19 @@ def run_cell_by_backend(backend_name: str, cell, base_seed: int,
     from the parent's submit time, nests a ``cell.eval`` span inside
     ``cell.run``, and gauges the batched engine's cache stats — the
     parent merges every sidecar after the pool drains. ``obs=None`` (the
-    default, and the disabled-tracing path) touches no files."""
+    default, and the disabled-tracing path) touches no files.
+
+    ``screen_fits`` forwards the cell's precomputed rung-0 screening
+    fitnesses (:func:`repro.dse.campaign.prescreen_cells_jax`) and is
+    only ever non-None for the fpga backend — the exhaustive
+    enumerators never see the keyword."""
     be = get_backend(backend_name)
+    kw = {} if screen_fits is None else {"screen_fits": screen_fits}
     if not obs:
         return be.run_cell(cell, base_seed=base_seed, population=population,
                            iterations=iterations, weights=weights,
                            searcher=searcher,
-                           searcher_config=searcher_config)
+                           searcher_config=searcher_config, **kw)
     from repro.obs import worker_tracer
     with worker_tracer(obs["events_dir"]) as tracer:
         tracer.span_at("queue.wait", obs["t_submit"],
@@ -953,7 +961,7 @@ def run_cell_by_backend(backend_name: str, cell, base_seed: int,
                                   population=population,
                                   iterations=iterations, weights=weights,
                                   searcher=searcher,
-                                  searcher_config=searcher_config)
+                                  searcher_config=searcher_config, **kw)
             if backend_name == "fpga":
                 from repro.core.batch_eval import cache_stats
                 for cache, st in cache_stats().items():

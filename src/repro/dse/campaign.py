@@ -39,9 +39,10 @@ from repro.core.pso import PSOConfig
 from repro.obs import (NULL, Tracer, chrome_path_for, chrome_trace,
                        events_dir_for, events_path_for, merge_events)
 
+from .frontier import FrontierIndex
 from .objectives import Objectives, scalarized_objective
-from .pareto import non_dominated, select_diverse
-from .store import SCHEMA_VERSION, ResultStore, rav_hash
+from .pareto import select_diverse
+from .store import SCHEMA_VERSION, CampaignStore, open_store, rav_hash
 
 if TYPE_CHECKING:  # pragma: no cover - circular-import-free type hints
     from .backends import Backend
@@ -137,9 +138,12 @@ def run_cell(cell: CampaignCell, base_seed: int = 0, population: int = 20,
              iterations: int = 30,
              weights: Mapping[str, float] | None = None,
              searcher: str = "pso",
-             searcher_config: Mapping | None = None) -> dict:
+             searcher_config: Mapping | None = None,
+             screen_fits=None) -> dict:
     """One full explore() for one cell -> a store record. Top-level (and all
-    arguments picklable) so ProcessPoolExecutor can ship it to workers."""
+    arguments picklable) so ProcessPoolExecutor can ship it to workers.
+    ``screen_fits`` optionally carries this cell's precomputed rung-0
+    screening fitnesses (:func:`prescreen_cells_jax`)."""
     net = build_net(cell.net, cell.h, cell.w)
     fpga = FPGAS[cell.fpga]
     cfg = PSOConfig(population=population, iterations=iterations,
@@ -147,7 +151,8 @@ def run_cell(cell: CampaignCell, base_seed: int = 0, population: int = 20,
     res = explore(net, fpga, dw=cell.precision, ww=cell.precision,
                   batch_max=cell.batch_max, cfg=cfg,
                   objective=scalarized_objective(weights),
-                  searcher=searcher, searcher_config=searcher_config)
+                  searcher=searcher, searcher_config=searcher_config,
+                  screen_fits=screen_fits)
     d = res.design
     return {
         "schema": SCHEMA_VERSION,
@@ -167,6 +172,54 @@ def run_cell(cell: CampaignCell, base_seed: int = 0, population: int = 20,
         "weights": dict(weights) if weights else None,
         "trace": res.convergence_trace(),
     }
+
+
+def prescreen_cells_jax(cells: Sequence[CampaignCell], *,
+                        base_seed: int = 0, population: int = 20,
+                        iterations: int = 30,
+                        searcher_config: Mapping | None = None,
+                        ) -> dict | None:
+    """Screen every cell's hyperband rung 0 in ONE jitted jax call.
+
+    Reproduces each cell's :class:`~repro.core.search.HyperbandConfig`
+    through the same construction path the searcher uses
+    (:func:`repro.core.search.searcher_config_for`), generates the exact
+    rung-0 position block the engine will ask for
+    (:func:`repro.core.search.hyperband_rung0`), and evaluates the whole
+    (cells x screen) batch through the cross-cell jax kernel
+    (:mod:`repro.core.screen_jax` — bit-identical to the per-cell NumPy
+    reference). Returns ``{cell_key: (screen,) fitness array}`` to hand
+    to :func:`run_cell` as ``screen_fits``, or ``None`` when jax is
+    unavailable (callers fall back to the per-cell NumPy screen).
+    """
+    from repro.core import screen_jax
+    from repro.core.search import (SearchSpace, hyperband_rung0,
+                                   searcher_config_for)
+    if not screen_jax.available():
+        return None
+    import numpy as np
+    tables, blocks, keys = [], [], []
+    for cell in cells:
+        net = build_net(cell.net, cell.h, cell.w)
+        fpga = FPGAS[cell.fpga]
+        pso = PSOConfig(population=population, iterations=iterations,
+                        seed=cell_seed(base_seed, cell))
+        cfg = searcher_config_for(
+            "hyperband",
+            base=dict(population=pso.population, iterations=pso.iterations,
+                      patience=pso.patience, seed=pso.seed),
+            overrides=searcher_config)
+        space = SearchSpace(sp_max=len(net.major_layers),
+                            batch_max=cell.batch_max)
+        blocks.append(hyperband_rung0(space, cfg))
+        tables.append(screen_jax.cell_tables(net, fpga, cell.precision,
+                                             cell.precision))
+        keys.append(cell.key)
+    if not keys:
+        return {}
+    ips = screen_jax.screen_cells(screen_jax.stack_cells(tables),
+                                  np.stack(blocks))
+    return {k: ips[i] for i, k in enumerate(keys)}
 
 
 @dataclasses.dataclass
@@ -190,6 +243,21 @@ class CampaignReport:
     def feasible(self) -> list[dict]:
         return [r for r in self.records if r["objectives"]["feasible"]]
 
+    def frontier_index(self) -> FrontierIndex:
+        """The campaign's incremental Pareto archive: feasible records
+        streamed once into a :class:`repro.dse.frontier.FrontierIndex`
+        (keys are feasible-record positions, payloads the records), built
+        lazily and cached — :meth:`frontier` and the report generator
+        read the front off this index instead of re-sorting the full
+        record list."""
+        if getattr(self, "_fi", None) is None:
+            be = self._backend()
+            fi = FrontierIndex()
+            for i, r in enumerate(self.feasible()):
+                fi.insert(i, be.canonical(r["objectives"]), payload=r)
+            self._fi = fi
+        return self._fi
+
     def ranked(self, weights: Mapping[str, float] | None = None) -> list[dict]:
         be = self._backend()
         recs = self.feasible()
@@ -205,17 +273,24 @@ class CampaignReport:
         SPREAD across the trade-off surface — extremes always included,
         clumps thinned — topped up from later fronts when the first front
         has fewer than ``k`` members.
+
+        Both paths read the cached :meth:`frontier_index`; only ``k``
+        larger than the first front falls back to the full NSGA-II sort
+        (the incremental archive keeps front 0 only).
         """
+        fi = self.frontier_index()
+        if k is None:
+            return [fi.payload(key) for key in fi.front_keys()]
+        if k <= fi.front_size():
+            return [fi.payload(key) for key in fi.diverse(k)]
         be = self._backend()
         recs = self.feasible()
         vecs = [be.canonical(r["objectives"]) for r in recs]
-        if k is None:
-            return [recs[i] for i in non_dominated(vecs)]
         return [recs[i] for i in select_diverse(vecs, k)]
 
 
 def run_campaign(cells: Iterable,
-                 store: ResultStore | str, *, base_seed: int = 0,
+                 store: CampaignStore | str, *, base_seed: int = 0,
                  population: int = 20, iterations: int = 30,
                  weights: Mapping[str, float] | None = None,
                  workers: int = 1,
@@ -225,6 +300,8 @@ def run_campaign(cells: Iterable,
                  verbose: bool = False,
                  searcher: str = "pso",
                  searcher_config: Mapping | None = None,
+                 shard: int | str = 0,
+                 jax_screen: bool = False,
                  ) -> CampaignReport:
     """Run (or resume) a campaign against a JSONL store.
 
@@ -249,6 +326,13 @@ def run_campaign(cells: Iterable,
     no-op tracer. ``verbose`` adds per-cell convergence detail (stop
     reason, PSO cache hits) to the progress lines.
 
+    ``store`` may name a v1 single JSONL file (the default layout) or a
+    sharded ``<store>.d/`` directory (see :mod:`repro.dse.store`);
+    ``shard`` names the shard THIS campaign process appends to, so
+    several hosts can run disjoint slices of one grid against the same
+    sharded store — each writes its own shard, resume reads them all —
+    with no lock contention.
+
     ``searcher`` picks the FPGA cells' search engine
     (:data:`repro.core.search.SEARCHERS`; default ``"pso"``) and
     ``searcher_config`` overrides that engine's config fields. Both ride
@@ -256,6 +340,13 @@ def run_campaign(cells: Iterable,
     silently serves a campaign run under another — mismatched cells
     re-run. Backends that enumerate exhaustively (tpu, cuda) accept only
     the default engine.
+
+    ``jax_screen=True`` (fpga backend + ``searcher="hyperband"`` only)
+    precomputes every to-run cell's rung-0 screening fitnesses in ONE
+    jitted cross-cell jax call (:func:`prescreen_cells_jax`) and hands
+    each cell its slice — results are bit-identical to the per-cell
+    NumPy screen, which also remains the silent fallback when jax is
+    not importable.
     """
     from .backends import get_backend, run_cell_by_backend
     be = get_backend(backend)
@@ -265,8 +356,7 @@ def run_campaign(cells: Iterable,
             f"has no pluggable search engine; --searcher {searcher!r} is "
             f"only valid for the fpga backend")
     cells = list(cells)
-    if not isinstance(store, ResultStore):
-        store = ResultStore(store)
+    store = open_store(store, shard=shard)
 
     tracer, events_dir = NULL, None
     if trace:
@@ -293,6 +383,28 @@ def run_campaign(cells: Iterable,
         f"{len(cells) - len(todo)} reused, "
         f"{len(todo)} to run (workers={workers})")
     tracer.count("cells.reused", len(cells) - len(todo))
+
+    screen_fits: dict = {}
+    if jax_screen:
+        if be.name != "fpga" or searcher != "hyperband":
+            raise ValueError(
+                "jax_screen precomputes hyperband rung-0 screening and "
+                "applies only to the fpga backend with "
+                "searcher='hyperband'")
+        if todo:
+            with tracer.span("screen.jax", cells=len(todo)):
+                fits = prescreen_cells_jax(
+                    todo, base_seed=base_seed, population=population,
+                    iterations=iterations, searcher_config=searcher_config)
+            if fits is None:
+                say("jax unavailable — cells fall back to the per-cell "
+                    "NumPy screen (identical results)")
+            else:
+                screen_fits = fits
+                n = len(next(iter(fits.values()))) if fits else 0
+                say(f"jax-screened {len(fits)} cells x {n} rung-0 "
+                    f"candidates in one call")
+                tracer.count("screen.jax_cells", len(fits))
 
     new_evals = 0
     done = 0
@@ -332,7 +444,8 @@ def run_campaign(cells: Iterable,
                     futs[pool.submit(run_cell_by_backend, be.name, c,
                                      base_seed, population, iterations,
                                      weights, obs, searcher,
-                                     searcher_config)] = c
+                                     searcher_config,
+                                     screen_fits.get(c.key))] = c
                 inflight = len(futs)
                 tracer.gauge("pool.inflight", inflight, workers=workers)
                 for fut in as_completed(futs):
@@ -341,6 +454,8 @@ def run_campaign(cells: Iterable,
                     tracer.gauge("pool.inflight", inflight, workers=workers)
         else:
             for c in todo:
+                kw = ({"screen_fits": screen_fits[c.key]}
+                      if c.key in screen_fits else {})
                 with tracer.span("cell.run", cell=c.key, backend=be.name):
                     with tracer.span("cell.eval", cell=c.key):
                         rec = be.run_cell(c, base_seed=base_seed,
@@ -348,7 +463,8 @@ def run_campaign(cells: Iterable,
                                           iterations=iterations,
                                           weights=weights,
                                           searcher=searcher,
-                                          searcher_config=searcher_config)
+                                          searcher_config=searcher_config,
+                                          **kw)
                 finish(c, rec)
 
     events_path = trace_json = None

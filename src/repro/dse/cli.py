@@ -30,15 +30,13 @@ from repro.core.search import searcher_names
 from .backends import (BACKENDS, get_backend, parse_inputs,  # noqa: F401
                        parse_searcher_config, parse_weights)
 from .campaign import CampaignReport, run_campaign
-from .pareto import diverse_front
-from .store import ResultStore
 
 
 def print_report(report: CampaignReport, weights: dict | None,
                  top: int) -> list[dict]:
     """Print the ranked + frontier tables; returns the first Pareto front
     (crowding-distance order, extremes first) so callers can reuse it
-    without redoing the O(n^2) dominance sort."""
+    without redoing the dominance sort."""
     be = report._backend()
     print(f"\n== campaign[{be.name}]: {len(report.cells)} cells "
           f"({report.new_cells} new, {report.reused_cells} reused; "
@@ -51,16 +49,15 @@ def print_report(report: CampaignReport, weights: dict | None,
     for rec in report.ranked(weights)[:top]:
         print(be.table_row(rec))
 
-    feas = report.feasible()
-    vecs = [be.canonical(r["objectives"]) for r in feas]
     # print the frontier as a diversity-ordered spread (rank, then
-    # crowding distance) so a truncated read-off still covers the surface
-    order = diverse_front(vecs)
-    front = [feas[i] for i in order]
+    # crowding distance) so a truncated read-off still covers the
+    # surface — read off the report's incremental frontier index
+    fi = report.frontier_index()
+    front = [fi.payload(key) for key in fi.diverse()]
     names = ", ".join(f"{s.name}[{'max' if s.maximize else 'min'}]"
                       for s in be.objectives)
     print(f"\n-- Pareto frontier: {len(front)} of "
-          f"{len(feas)} feasible designs ({names}) --")
+          f"{len(fi)} feasible designs ({names}) --")
     print(be.table_header())
     for rec in front:
         print(be.table_row(rec))
@@ -82,7 +79,14 @@ def main(argv: list[str] | None = None) -> CampaignReport:
         be.add_axis_arguments(ap)
     ap.add_argument("--store", default=None,
                     help="JSONL result store (resumable/memoized; default "
-                         "per backend, e.g. results/dse_campaign.jsonl)")
+                         "per backend, e.g. results/dse_campaign.jsonl). "
+                         "A <name>.d path selects the sharded v2 layout "
+                         "(see docs/store.md)")
+    ap.add_argument("--shard", default="0",
+                    help="shard id THIS process appends to when --store "
+                         "is sharded — give each concurrent campaign host "
+                         "its own id and they share one store without "
+                         "lock contention")
     ap.add_argument("--workers", type=int, default=1,
                     help="process-pool width; 0 = one per CPU")
     ap.add_argument("--population", type=int, default=20)
@@ -100,6 +104,12 @@ def main(argv: list[str] | None = None) -> CampaignReport:
                     help="engine config overrides, e.g. "
                          "screen=2048,survivors=8 (fields of the engine's "
                          "config dataclass; see docs/search.md)")
+    ap.add_argument("--jax-screen", action="store_true",
+                    help="precompute every cell's hyperband rung-0 "
+                         "screening in ONE jitted cross-cell jax call "
+                         "(fpga backend + --searcher hyperband only; "
+                         "bit-identical to the per-cell NumPy screen, "
+                         "which stays the fallback when jax is missing)")
     ap.add_argument("--weights", default="",
                     help="scalarization, e.g. throughput_ips=1,dsp_eff=500 "
                          "(fpga default: throughput only, the paper's "
@@ -126,7 +136,8 @@ def main(argv: list[str] | None = None) -> CampaignReport:
     workers = args.workers if args.workers > 0 else (os.cpu_count() or 1)
     cells = backend.cells_from_args(args)
     store_path = args.store or backend.default_store
-    report = run_campaign(cells, ResultStore(store_path),
+    shard = int(args.shard) if str(args.shard).isdigit() else args.shard
+    report = run_campaign(cells, store_path,
                           base_seed=args.seed, population=args.population,
                           iterations=args.iterations, weights=weights,
                           workers=workers,
@@ -134,7 +145,8 @@ def main(argv: list[str] | None = None) -> CampaignReport:
                           backend=backend, trace=args.trace,
                           verbose=args.verbose, searcher=args.searcher,
                           searcher_config=parse_searcher_config(
-                              args.searcher_config))
+                              args.searcher_config), shard=shard,
+                          jax_screen=args.jax_screen)
     front = print_report(report, weights, args.top)
 
     if args.frontier_json:

@@ -7,8 +7,10 @@
     python -m repro.dse.obs --fixture --out docs/reports/example_health.md
 
 The summary is the plain-text twin of the report's campaign-health
-section: wall-time breakdown by span, worker utilization, slowest
-cells, and counter totals. ``--validate`` checks every event against
+section: per-backend store stats (cells, feasible, incremental-frontier
+size — streamed off ``CampaignStore.iter_records``, never materialized),
+wall-time breakdown by span, worker utilization, slowest cells, and
+counter totals. ``--validate`` checks every event against
 the v1 schema and exits non-zero on any problem (the CI docs job runs
 it on a freshly traced smoke campaign). ``--chrome`` writes the
 Chrome trace-event export (load in Perfetto / ``chrome://tracing``).
@@ -66,6 +68,31 @@ def example_health_md() -> str:
         "",
     ] + health_section(fixture_records(), fixture_events())
     return "\n".join(lines).rstrip() + "\n"
+
+
+def print_store_stats(store) -> None:
+    """Per-backend store stats in one streaming pass per backend: cell
+    and feasible counts plus the incremental Pareto frontier size —
+    ``iter_records()`` + :class:`repro.dse.frontier.FrontierIndex`, so a
+    100k-record store summarizes without a record list in memory."""
+    from .backends import BACKENDS, get_backend
+    from .frontier import FrontierIndex
+    layout = "sharded" if store.sharded else "v1"
+    print(f"\n-- store ({layout}, {len(store)} cells) --")
+    for bk in store.backends():
+        n = feas = 0
+        be = get_backend(bk) if bk in BACKENDS else None
+        fi = FrontierIndex()
+        for rec in store.iter_records(bk):
+            n += 1
+            if rec.get("objectives", {}).get("feasible"):
+                feas += 1
+                if be is not None:
+                    fi.insert(rec["cell_key"],
+                              be.canonical(rec["objectives"]))
+        front = fi.front_size() if be is not None else "?"
+        print(f"{bk:<8} {n:>6} cells  {feas:>6} feasible  "
+              f"frontier {front}")
 
 
 def print_summary(events: list[dict], top: int) -> None:
@@ -156,6 +183,11 @@ def main(argv: list[str] | None = None) -> int:
             print(f"INVALID: {p}")
         print(f"validate: {len(events)} events, {len(problems)} problem(s)")
         rc = 1 if problems else 0
+
+    from .store import open_store, sharded_dir_for
+    store_p = Path(args.store)
+    if store_p.exists() or sharded_dir_for(store_p).is_dir():
+        print_store_stats(open_store(args.store))
 
     print_summary(events, args.top)
 

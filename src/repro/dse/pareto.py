@@ -17,6 +17,8 @@ from __future__ import annotations
 import math
 from typing import Sequence, TypeVar
 
+import numpy as np
+
 T = TypeVar("T")
 
 Vector = Sequence[float]
@@ -33,6 +35,23 @@ def dominates(a: Vector, b: Vector) -> bool:
         if ai > bi:
             better = True
     return better
+
+
+def dominance_split(mat: np.ndarray, v: np.ndarray,
+                    ) -> tuple[bool, np.ndarray]:
+    """One vector against a set, vectorized: ``(dominated, dominates)``
+    where ``dominated`` says some row of ``mat`` strictly dominates ``v``
+    and ``dominates`` masks the rows ``v`` strictly dominates. The
+    incremental frontier (:mod:`repro.dse.frontier`) calls this once per
+    insert, so it is the O(front) inner loop of million-record streaming
+    — numpy, not the scalar :func:`dominates`."""
+    if mat.size == 0:
+        return False, np.zeros(0, dtype=bool)
+    ge = mat >= v
+    gt = mat > v
+    dominated = bool((ge.all(axis=1) & gt.any(axis=1)).any())
+    dominates_mask = (~gt).all(axis=1) & (~ge).any(axis=1)
+    return dominated, dominates_mask
 
 
 def non_dominated(vectors: Sequence[Vector]) -> list[int]:

@@ -49,13 +49,14 @@ import argparse
 import dataclasses
 import math
 import sys
-from typing import Mapping, Sequence
+from typing import Iterable, Mapping, Sequence
 
 from repro.core.hw_specs import CostEnvelope
 
 from .backends import BACKENDS, get_backend, record_backend, workload_families
 from .objectives import NORMALIZED_OBJECTIVES
-from .store import ResultStore
+from .frontier import FrontierIndex
+from .store import CampaignStore, open_store
 
 #: Normalized objective names a placement can maximize.
 PLACEMENT_OBJECTIVES: tuple[str, ...] = tuple(
@@ -213,14 +214,15 @@ def parse_workloads(text: str) -> list[str]:
     return out
 
 
-def pooled_records(stores: Sequence[ResultStore | Sequence[Mapping]],
+def pooled_records(stores: Sequence[CampaignStore | Iterable[Mapping]],
                    ) -> list[dict]:
     """Records of several stores merged by cell key, LATER STORES WINNING
     — the same last-wins rule a concatenated JSONL store follows, so a
-    resumed or re-run store never double-counts a cell."""
+    resumed or re-run store never double-counts a cell. Stores are
+    streamed (``iter_records``), never materialized."""
     merged: dict[str, dict] = {}
     for s in stores:
-        recs = s.records() if isinstance(s, ResultStore) else s
+        recs = s.iter_records() if isinstance(s, CampaignStore) else s
         for rec in recs:
             key = rec.get("cell_key")
             if key:
@@ -278,10 +280,28 @@ def prune_candidates(cands: Sequence[Candidate], budget: CostEnvelope,
                      ) -> list[Candidate]:
     """Drop candidates another one beats on value without costing more on
     any budgeted axis. With no caps this keeps just the best-value
-    design; with caps it keeps the value-vs-cost frontier."""
+    design; with caps it keeps the value-vs-cost frontier.
+
+    Runs through the incremental dominance archive
+    (:class:`repro.dse.frontier.FrontierIndex`) — O(n · front) instead of
+    the old all-pairs O(n²) — with :func:`_dominated`'s exact-tie rule
+    (identical vectors collapse to the smallest cell key) applied on top,
+    since the archive itself keeps duplicates."""
     axes = budget.capped_axes()
-    return [c for c in cands
-            if not any(_dominated(c, k, axes) for k in cands if k is not c)]
+    if not cands:
+        return []
+    # canonical maximization form: value up, every budgeted cost down
+    vecs = [(c.value,) + tuple(-getattr(c, a) for a in axes) for c in cands]
+    tie_winner: dict[tuple, str] = {}
+    for c, v in zip(cands, vecs):
+        if v not in tie_winner or c.cell_key < tie_winner[v]:
+            tie_winner[v] = c.cell_key
+    fi = FrontierIndex()
+    for i, v in enumerate(vecs):
+        fi.insert(i, v)
+    on_front = set(fi.front_keys())
+    return [c for i, c in enumerate(cands)
+            if i in on_front and c.cell_key == tie_winner[vecs[i]]]
 
 
 # ---------------------------------------------------------------------------
@@ -504,7 +524,7 @@ def place(workloads: Sequence[str], records: Sequence[Mapping],
         options=options, explored=explored)
 
 
-def ensure_coverage(workloads: Sequence[str], store: ResultStore,
+def ensure_coverage(workloads: Sequence[str], store: CampaignStore,
                     known: Mapping[str, Sequence[Candidate]], *,
                     progress=None, workers: int = 1) -> list[str]:
     """Run the per-backend default campaign (``coverage_cells``) for every
@@ -648,7 +668,7 @@ def main(argv: list[str] | None = None) -> int:
     if args.fixture:
         records = fixture_records()
     elif args.stores:
-        records = pooled_records([ResultStore(p) for p in args.stores])
+        records = pooled_records([open_store(p) for p in args.stores])
         if not records:
             ap.error(f"stores {args.stores} are empty or missing")
     else:
@@ -670,11 +690,11 @@ def main(argv: list[str] | None = None) -> int:
         ap.error(str(e.args[0] if e.args else e))
 
     if args.evaluate_missing and not args.fixture:
-        eval_store = ResultStore(args.eval_store or args.stores[0])
+        eval_store = open_store(args.eval_store or args.stores[0])
         filled = ensure_coverage(workloads, eval_store, known,
                                  progress=print, workers=args.workers)
         if filled:
-            records = pooled_records([records, eval_store.records()])
+            records = pooled_records([records, eval_store.iter_records()])
             known = candidates_by_workload(records, args.objective)
 
     try:

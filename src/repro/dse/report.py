@@ -1,8 +1,16 @@
 """Markdown campaign reports from JSONL stores (+ optional bench JSON).
 
 The ROADMAP's "perf-trajectory dashboard": turn any
-:class:`repro.dse.store.ResultStore` — FPGA, TPU, or a mixed store — into
-a human-readable Markdown report under ``docs/reports/``:
+:class:`repro.dse.store.CampaignStore` — FPGA, TPU, or a mixed store —
+into a human-readable Markdown report under ``docs/reports/``.
+
+Rendering is *streaming*: every section is built by per-backend /
+cross-backend accumulators (record counts, running per-workload winners,
+and an incremental Pareto archive —
+:class:`repro.dse.frontier.FrontierIndex`) fed one record at a time, so
+a 100k-record store renders in ONE pass over ``iter_records()`` with
+O(frontier) memory instead of materializing and re-sorting the full
+record list. Sections:
 
 * per-backend **Pareto frontier tables**, ordered by NSGA-II rank +
   crowding distance so a truncated read-off still spreads across the
@@ -43,17 +51,17 @@ from __future__ import annotations
 import argparse
 import json
 from pathlib import Path
-from typing import Mapping, Sequence
+from typing import Iterable, Mapping, Sequence
 
 from repro.obs import (campaign_wall, counter_totals, events_path_for,
                        load_events, slowest_spans, span_totals,
                        worker_utilization)
 
 from .backends import BACKENDS, get_backend, record_backend
+from .frontier import FrontierIndex
 from .objectives import (NORMALIZED_DEFAULT_WEIGHTS, NORMALIZED_OBJECTIVES,
                          canonical_vector, scalarize_values)
-from .pareto import diverse_front
-from .store import ResultStore
+from .store import open_store
 
 #: Where reports land unless --out says otherwise.
 DEFAULT_REPORT_DIR = Path("docs/reports")
@@ -97,82 +105,112 @@ def _objective_values(be, rec: Mapping) -> list:
 # ---------------------------------------------------------------------------
 
 
-def _backend_section(name: str, recs: list[dict], k: int) -> list[str]:
-    be = get_backend(name)
-    feas = [r for r in recs if r["objectives"].get("feasible")]
-    lines = [f"## Backend `{name}` — {len(recs)} cells, "
-             f"{len(feas)} feasible", ""]
-    lines += ["Objectives: " + ", ".join(
-        f"`{s.name}` ({'max' if s.maximize else 'min'}, {s.units})"
-        for s in be.objectives), ""]
-    if not feas:
-        lines += ["_No feasible designs in this store._", ""]
+class _BackendAcc:
+    """Streaming per-backend report state: record/feasible counts, the
+    incremental Pareto archive (integer keys in feasible-arrival order,
+    records as payloads), and running per-workload winners — one
+    :meth:`add` per record, no record list retained."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.known = name in BACKENDS
+        self.be = get_backend(name) if self.known else None
+        self.count = 0
+        self.feasible = 0
+        self.fi = FrontierIndex()
+        self.winners: dict[str, tuple[float, dict]] = {}
+
+    def add(self, rec: Mapping) -> None:
+        self.count += 1
+        if not self.known or not rec["objectives"].get("feasible"):
+            return
+        be = self.be
+        self.fi.insert(self.feasible, be.canonical(rec["objectives"]),
+                       payload=rec)
+        self.feasible += 1
+        g = be.group_key(rec)
+        score = be.scalarize(rec["objectives"])
+        best = self.winners.get(g)
+        # strict > keeps the FIRST maximum, matching max() over a list
+        if best is None or score > best[0]:
+            self.winners[g] = (score, rec)
+
+    def section(self, k: int) -> list[str]:
+        be = self.be
+        lines = [f"## Backend `{self.name}` — {self.count} cells, "
+                 f"{self.feasible} feasible", ""]
+        lines += ["Objectives: " + ", ".join(
+            f"`{s.name}` ({'max' if s.maximize else 'min'}, {s.units})"
+            for s in be.objectives), ""]
+        if not self.feasible:
+            lines += ["_No feasible designs in this store._", ""]
+            return lines
+
+        # diversity order: whole front sorted by crowding so the top rows
+        # are the spread, not a clump around one region
+        entries = {key: (vec, rec) for key, vec, rec in self.fi.front()}
+        order = self.fi.diverse()
+        front = [entries[key][1] for key in order]
+        fvecs = [entries[key][0] for key in order]
+
+        lines += [f"### Pareto frontier ({len(front)} of {self.feasible} "
+                  f"feasible, crowding-distance order)", ""]
+        cols = ["cell"] + _objective_columns(be)
+        rows = [[f"`{r['cell_key']}`"] + _objective_values(be, r)
+                for r in front[:len(front) if k <= 0 else k]]
+        shown = len(rows)
+        lines += _table(cols, rows)
+        if shown < len(front):
+            lines += ["", f"_{len(front) - shown} more frontier designs in "
+                          f"the store (rerun with `--top {len(front)}`)._"]
+        lines += [""]
+
+        lines += [f"### Per-workload winners "
+                  f"(best by default weights {dict(be.default_weights)})", ""]
+        rows = []
+        for g in sorted(self.winners):
+            win = self.winners[g][1]
+            rows.append([g, f"`{win['cell_key']}`"]
+                        + _objective_values(be, win))
+        lines += _table(["workload", "cell"] + _objective_columns(be), rows)
+        lines += [""]
+
+        # trade-off summary: the frontier specialist per objective
+        lines += ["### Objective trade-offs (frontier specialist per "
+                  "objective)", ""]
+        rows = []
+        for j, spec in enumerate(be.objectives):
+            best_i = max(range(len(front)), key=lambda i: fvecs[i][j])
+            rows.append([f"`{spec.name}`", f"`{front[best_i]['cell_key']}`"]
+                        + _objective_values(be, front[best_i]))
+        lines += _table(["best at", "cell"] + _objective_columns(be), rows)
+        lines += [""]
         return lines
 
-    vecs = [be.canonical(r["objectives"]) for r in feas]
-    # diversity order: whole front sorted by crowding so the top rows
-    # are the spread, not a clump around one region
-    order = diverse_front(vecs)
-    front = [feas[i] for i in order]
-    fvecs = [vecs[i] for i in order]
 
-    lines += [f"### Pareto frontier ({len(front)} of {len(feas)} feasible, "
-              f"crowding-distance order)", ""]
-    cols = ["cell"] + _objective_columns(be)
-    rows = [[f"`{r['cell_key']}`"] + _objective_values(be, r)
-            for r in front[:len(front) if k <= 0 else k]]
-    shown = len(rows)
-    lines += _table(cols, rows)
-    if shown < len(front):
-        lines += ["", f"_{len(front) - shown} more frontier designs in the "
-                      f"store (rerun with `--top {len(front)}`)._"]
-    lines += [""]
-
-    # per-workload winners under the backend's default scalarization
-    groups: dict[str, list[dict]] = {}
-    for r in feas:
-        groups.setdefault(be.group_key(r), []).append(r)
-    lines += [f"### Per-workload winners "
-              f"(best by default weights {dict(be.default_weights)})", ""]
-    rows = []
-    for g in sorted(groups):
-        win = max(groups[g], key=lambda r: be.scalarize(r["objectives"]))
-        rows.append([g, f"`{win['cell_key']}`"]
-                    + _objective_values(be, win))
-    lines += _table(["workload", "cell"] + _objective_columns(be), rows)
-    lines += [""]
-
-    # trade-off summary: the frontier specialist per objective
-    lines += ["### Objective trade-offs (frontier specialist per "
-              "objective)", ""]
-    rows = []
-    for j, spec in enumerate(be.objectives):
-        best_i = max(range(len(front)), key=lambda i: fvecs[i][j])
-        rows.append([f"`{spec.name}`", f"`{front[best_i]['cell_key']}`"]
-                    + _objective_values(be, front[best_i]))
-    lines += _table(["best at", "cell"] + _objective_columns(be), rows)
-    lines += [""]
-    return lines
+def _norm_row(r: Mapping, label: str | None = None) -> dict | None:
+    """One record -> its cross-backend normalized row
+    (``{rec, backend, norm, label}``), or ``None`` when the record is
+    from an unknown backend, not normalizable, or infeasible."""
+    name = record_backend(r)
+    if name not in BACKENDS:
+        return None
+    be = get_backend(name)
+    try:
+        norm = be.normalized(r)
+    except (KeyError, TypeError):
+        return None  # foreign/truncated record: not normalizable
+    if not norm["feasible"]:
+        return None
+    return {"rec": r, "backend": name, "norm": norm, "label": label}
 
 
 def _normalized_rows(records: Sequence[Mapping],
                      label: str | None = None) -> list[dict]:
     """Feasible records of known backends, re-expressed in the
     cross-backend normalized schema: ``{rec, backend, norm, label}``."""
-    rows = []
-    for r in records:
-        name = record_backend(r)
-        if name not in BACKENDS:
-            continue
-        be = get_backend(name)
-        try:
-            norm = be.normalized(r)
-        except (KeyError, TypeError):
-            continue  # foreign/truncated record: not normalizable
-        if norm["feasible"]:
-            rows.append({"rec": r, "backend": name, "norm": norm,
-                         "label": label})
-    return rows
+    return [row for r in records
+            if (row := _norm_row(r, label)) is not None]
 
 
 def _norm_score(row: Mapping) -> float:
@@ -188,60 +226,94 @@ def _normalized_values(norm: Mapping) -> list:
     return [norm[s.name] for s in NORMALIZED_OBJECTIVES]
 
 
-def _cross_backend_section(records: Sequence[Mapping], k: int,
-                           labeled: bool = False) -> list[str]:
-    """One frontier across device families: every feasible record mapped
-    to the normalized objective schema, Pareto-sorted together."""
-    rows_in = (_normalized_rows(records) if not labeled else list(records))
-    lines = ["## Cross-backend frontier (normalized objectives)", ""]
-    if not rows_in:
-        lines += ["_No normalizable feasible designs._", ""]
+class _NormAcc:
+    """Streaming cross-backend state over normalized rows: the pooled
+    incremental frontier (unique integer keys in arrival order, rows as
+    payloads), running per-backend champions, and the best overall
+    score — shared by the single-store cross-backend section and the
+    ``--compare`` pooled frontier, so neither materializes the pooled
+    record list."""
+
+    def __init__(self):
+        self.n = 0
+        self.names: set[str] = set()
+        self.fi = FrontierIndex()
+        self.champs: dict[str, tuple[float, dict]] = {}
+        self.best: float | None = None
+
+    def add_record(self, r: Mapping,
+                   label: str | None = None) -> dict | None:
+        """Feed one raw record; returns its normalized row (or ``None``
+        when it does not participate)."""
+        row = _norm_row(r, label)
+        if row is not None:
+            self.add_row(row)
+        return row
+
+    def add_row(self, row: dict) -> None:
+        self.fi.insert(self.n, canonical_vector(row["norm"],
+                                                NORMALIZED_OBJECTIVES),
+                       payload=row)
+        self.n += 1
+        self.names.add(row["backend"])
+        s = _norm_score(row)
+        champ = self.champs.get(row["backend"])
+        if champ is None or s > champ[0]:
+            self.champs[row["backend"]] = (s, row)
+        if self.best is None or s > self.best:
+            self.best = s
+
+    def section(self, k: int, labeled: bool = False) -> list[str]:
+        """One frontier across device families: every feasible record
+        mapped to the normalized objective schema, Pareto-sorted
+        together."""
+        lines = ["## Cross-backend frontier (normalized objectives)", ""]
+        if not self.n:
+            lines += ["_No normalizable feasible designs._", ""]
+            return lines
+        names = sorted(self.names)
+        lines += [f"{self.n} feasible cells from backend(s) "
+                  + ", ".join(f"`{n}`" for n in names)
+                  + ", compared in normalized units: "
+                  + ", ".join(f"`{s.name}` ({s.units})"
+                              for s in NORMALIZED_OBJECTIVES)
+                  + ". Hardware watt/dollar/peak terms come from the spec "
+                    "tables in `repro.core.hw_specs`.", ""]
+
+        payloads = {key: row for key, _, row in self.fi.front()}
+        order = self.fi.diverse()
+        shown = order[:len(order) if k <= 0 else k]
+        cols = ((["store"] if labeled else []) + ["backend", "cell"]
+                + _normalized_columns())
+        rows = []
+        for key in shown:
+            x = payloads[key]
+            rows.append(([x["label"]] if labeled else [])
+                        + [f"`{x['backend']}`", f"`{x['rec']['cell_key']}`"]
+                        + _normalized_values(x["norm"]))
+        lines += [f"### Frontier ({len(order)} of {self.n} designs, "
+                  f"crowding-distance order)", ""]
+        lines += _table(cols, rows)
+        if len(shown) < len(order):
+            lines += ["", f"_{len(order) - len(shown)} more frontier "
+                          f"designs (rerun with `--top {len(order)}`)._"]
+        lines += [""]
+
+        # per-backend champions under the default normalized scalarization
+        lines += [f"### Backend champions (best by "
+                  f"{dict(NORMALIZED_DEFAULT_WEIGHTS)})", ""]
+        best_overall = self.best
+        rows = []
+        for n in names:
+            score, champ = self.champs[n]
+            ratio = (score / best_overall) if best_overall else 0.0
+            rows.append([f"`{n}`", f"`{champ['rec']['cell_key']}`"]
+                        + _normalized_values(champ["norm"])
+                        + [f"{ratio:.2f}x"])
+        lines += _table(["backend", "cell"] + _normalized_columns()
+                        + ["vs best"], rows)
+        lines += [""]
         return lines
-    names = sorted({x["backend"] for x in rows_in})
-    lines += [f"{len(rows_in)} feasible cells from backend(s) "
-              + ", ".join(f"`{n}`" for n in names)
-              + ", compared in normalized units: "
-              + ", ".join(f"`{s.name}` ({s.units})"
-                          for s in NORMALIZED_OBJECTIVES)
-              + ". Hardware watt/dollar/peak terms come from the spec "
-                "tables in `repro.core.hw_specs`.", ""]
-
-    vecs = [canonical_vector(x["norm"], NORMALIZED_OBJECTIVES)
-            for x in rows_in]
-    order = diverse_front(vecs)
-    shown = order[:len(order) if k <= 0 else k]
-    cols = ((["store"] if labeled else []) + ["backend", "cell"]
-            + _normalized_columns())
-    rows = []
-    for i in shown:
-        x = rows_in[i]
-        rows.append(([x["label"]] if labeled else [])
-                    + [f"`{x['backend']}`", f"`{x['rec']['cell_key']}`"]
-                    + _normalized_values(x["norm"]))
-    lines += [f"### Frontier ({len(order)} of {len(rows_in)} designs, "
-              f"crowding-distance order)", ""]
-    lines += _table(cols, rows)
-    if len(shown) < len(order):
-        lines += ["", f"_{len(order) - len(shown)} more frontier designs "
-                      f"(rerun with `--top {len(order)}`)._"]
-    lines += [""]
-
-    # per-backend champions under the default normalized scalarization
-    lines += [f"### Backend champions (best by "
-              f"{dict(NORMALIZED_DEFAULT_WEIGHTS)})", ""]
-    best_overall = max(_norm_score(x) for x in rows_in)
-    rows = []
-    for n in names:
-        champ = max((x for x in rows_in if x["backend"] == n),
-                    key=_norm_score)
-        ratio = (_norm_score(champ) / best_overall) if best_overall else 0.0
-        rows.append([f"`{n}`", f"`{champ['rec']['cell_key']}`"]
-                    + _normalized_values(champ["norm"])
-                    + [f"{ratio:.2f}x"])
-    lines += _table(["backend", "cell"] + _normalized_columns()
-                    + ["vs best"], rows)
-    lines += [""]
-    return lines
 
 
 # ---------------------------------------------------------------------------
@@ -255,7 +327,7 @@ def _pct(new: float, old: float) -> str:
     return f"{(new - old) / old * 100:+.1f}%"
 
 
-def render_compare(stores: Sequence[tuple[str, Sequence[Mapping]]], *,
+def render_compare(stores: Sequence[tuple[str, Iterable[Mapping]]], *,
                    title: str | None = None, k: int = 12) -> str:
     """Two or more (label, records) stores -> a Markdown comparison.
 
@@ -263,20 +335,52 @@ def render_compare(stores: Sequence[tuple[str, Sequence[Mapping]]], *,
     passing two snapshots of the same campaign shows perf drift over
     time, and passing sibling backends' stores shows which family wins
     each workload and by how much.
+
+    Each store's records may be any iterable (e.g. a streaming
+    ``iter_records()``) and is consumed exactly once: summary counts,
+    trajectories, winner groups, and the pooled frontier all accumulate
+    in that single pass, sharing one incremental frontier index.
     """
+    stores = list(stores)
     if len(stores) < 2:
         raise ValueError("compare needs at least two stores")
     labels = [lab for lab, _ in stores]
     title = title or ("DSE store comparison — " + " vs ".join(labels))
-    per_store = [(lab, _normalized_rows(recs, lab)) for lab, recs in stores]
+
+    pooled = _NormAcc()
+    summaries = []       # (label, cells, backend names, normalizable, best)
+    traj: list[dict[str, float | None]] = []  # per-store objective maxima
+    groups: dict[str, dict[str, dict]] = {}   # workload -> label -> best row
+    for lab, recs in stores:
+        n, n_norm, best = 0, 0, None
+        names: set[str] = set()
+        bests: dict[str, float | None] = {s.name: None
+                                          for s in NORMALIZED_OBJECTIVES}
+        for r in recs:
+            n += 1
+            names.add(record_backend(r))
+            row = pooled.add_record(r, label=lab)
+            if row is None:
+                continue
+            n_norm += 1
+            s = _norm_score(row)
+            if best is None or s > best:
+                best = s
+            for spec in NORMALIZED_OBJECTIVES:
+                v = row["norm"][spec.name]
+                if bests[spec.name] is None or v > bests[spec.name]:
+                    bests[spec.name] = v
+            g = get_backend(row["backend"]).group_key(row["rec"])
+            cur = groups.setdefault(g, {})
+            if lab not in cur or s > _norm_score(cur[lab]):
+                cur[lab] = row
+        summaries.append((lab, n, names, n_norm,
+                          best if best is not None else 0.0))
+        traj.append(bests)
 
     lines = [f"# {title}", ""]
-    rows = []
-    for (lab, recs), (_, rows_n) in zip(stores, per_store):
-        backends = sorted({record_backend(r) for r in recs})
-        best = max(map(_norm_score, rows_n), default=0.0)
-        rows.append([lab, len(recs), ", ".join(f"`{b}`" for b in backends),
-                     len(rows_n), best])
+    rows = [[lab, n, ", ".join(f"`{b}`" for b in sorted(names)), n_norm,
+             best] for lab, n, names, n_norm, best in summaries]
     lines += _table(["store", "cells", "backends", "feasible (normalizable)",
                      f"best {dict(NORMALIZED_DEFAULT_WEIGHTS)}"], rows)
     lines += [""]
@@ -286,8 +390,8 @@ def render_compare(stores: Sequence[tuple[str, Sequence[Mapping]]], *,
               ""]
     rows = []
     for spec in NORMALIZED_OBJECTIVES:
-        bests = [max((x["norm"][spec.name] for x in rows_n), default=0.0)
-                 for _, rows_n in per_store]
+        bests = [(t[spec.name] if t[spec.name] is not None else 0.0)
+                 for t in traj]
         rows.append([f"`{spec.name}` ({spec.units})"] + bests
                     + [_pct(bests[-1], bests[0])])
     lines += _table(["objective"] + labels + ["last vs first"], rows)
@@ -298,13 +402,6 @@ def render_compare(stores: Sequence[tuple[str, Sequence[Mapping]]], *,
               "Best design per workload per store under the default "
               f"normalized scalarization {dict(NORMALIZED_DEFAULT_WEIGHTS)}; "
               "delta compares the LAST store against the FIRST.", ""]
-    groups: dict[str, dict[str, dict]] = {}
-    for lab, rows_n in per_store:
-        for x in rows_n:
-            g = get_backend(x["backend"]).group_key(x["rec"])
-            cur = groups.setdefault(g, {})
-            if lab not in cur or _norm_score(x) > _norm_score(cur[lab]):
-                cur[lab] = x
     rows = []
     for g in sorted(groups):
         per_lab = groups[g]
@@ -325,8 +422,7 @@ def render_compare(stores: Sequence[tuple[str, Sequence[Mapping]]], *,
     lines += [""]
 
     # pooled cross-backend frontier, annotated with source store
-    pooled = [x for _, rows_n in per_store for x in rows_n]
-    lines += _cross_backend_section(pooled, k, labeled=True)
+    lines += pooled.section(k, labeled=True)
     return "\n".join(lines).rstrip() + "\n"
 
 
@@ -426,7 +522,7 @@ def _pct_of(part: float, whole: float) -> str:
 
 def health_section(records: Sequence[Mapping],
                    events: Sequence[Mapping] | None = None,
-                   k: int = 10) -> list[str]:
+                   k: int = 10, *, total: int | None = None) -> list[str]:
     """The campaign-health section: where the wall time went (spans),
     which workers sat idle (utilization), which cells dominated the run
     (slowest-cell table), and per-cell convergence diagnostics from the
@@ -483,8 +579,9 @@ def health_section(records: Sequence[Mapping],
 
     traced = [r for r in records if isinstance(r.get("trace"), Mapping)]
     if traced:
+        n_all = total if total is not None else len(records)
         lines += [f"### Convergence diagnostics ({len(traced)} of "
-                  f"{len(records)} cells carry a `trace`)", ""]
+                  f"{n_all} cells carry a `trace`)", ""]
         rows = []
         capped = []
         for r in sorted(traced, key=lambda r: r["cell_key"]):
@@ -546,11 +643,18 @@ def health_section(records: Sequence[Mapping],
     return lines
 
 
-def render_report(records: Sequence[Mapping], *,
+def render_report(records: Iterable[Mapping], *,
                   title: str = "DSE campaign report",
                   bench: Mapping | None = None, k: int = 12,
                   events: Sequence[Mapping] | None = None) -> str:
     """Records (any mix of backends) -> a Markdown report string.
+
+    ``records`` may be any iterable — typically a streaming
+    ``CampaignStore.iter_records()`` — and is consumed in ONE pass: every
+    section reads off the per-backend / cross-backend accumulators, so
+    memory stays O(frontier + winners), not O(records). Only records
+    carrying a convergence ``trace`` are retained (for the health
+    tables).
 
     ``k`` caps each frontier table at the k most-spread designs
     (NSGA-II rank + crowding order); ``k <= 0`` means no cap.
@@ -559,24 +663,37 @@ def render_report(records: Sequence[Mapping], *,
     with a ``trace`` field add convergence diagnostics even without
     events.
     """
-    groups: dict[str, list[dict]] = {}
+    accs: dict[str, _BackendAcc] = {}
+    norm = _NormAcc()
+    traced: list[Mapping] = []
+    total = 0
     for r in records:
-        groups.setdefault(record_backend(r), []).append(r)
+        total += 1
+        name = record_backend(r)
+        acc = accs.get(name)
+        if acc is None:
+            acc = accs[name] = _BackendAcc(name)
+        acc.add(r)
+        norm.add_record(r)
+        if isinstance(r.get("trace"), Mapping):
+            traced.append(r)
+
     lines = [f"# {title}", "",
-             f"{len(records)} campaign cells across "
-             f"{len(groups)} backend(s): "
-             + ", ".join(f"`{n}`" for n in sorted(groups)) + ".", ""]
-    for name in sorted(groups):
-        if name not in BACKENDS:
-            lines += [f"## Backend `{name}` — {len(groups[name])} cells "
+             f"{total} campaign cells across "
+             f"{len(accs)} backend(s): "
+             + ", ".join(f"`{n}`" for n in sorted(accs)) + ".", ""]
+    for name in sorted(accs):
+        acc = accs[name]
+        if not acc.known:
+            lines += [f"## Backend `{name}` — {acc.count} cells "
                       f"(unknown backend; skipped)", ""]
             continue
-        lines += _backend_section(name, groups[name], k)
-    if len([n for n in groups if n in BACKENDS]) > 1:
-        lines += _cross_backend_section(list(records), k)
-    if events or any(isinstance(r.get("trace"), Mapping) for r in records):
-        lines += health_section(records, events, k=min(k, 10) if k > 0
-                                else 10)
+        lines += acc.section(k)
+    if len([n for n in accs if accs[n].known]) > 1:
+        lines += norm.section(k)
+    if events or traced:
+        lines += health_section(traced, events, k=min(k, 10) if k > 0
+                                else 10, total=total)
     if bench:
         lines += _bench_section(bench)
     return "\n".join(lines).rstrip() + "\n"
@@ -810,14 +927,14 @@ def main(argv: list[str] | None = None) -> int:
             ap.error("--compare needs at least two stores")
         stores, labels = [], []
         for path in args.compare:
-            s = ResultStore(path)
+            s = open_store(path)
             if not len(s):
                 ap.error(f"store {path} is empty or missing")
             stem = Path(path).stem
             n_seen = sum(1 for l in labels if l.split("#")[0] == stem)
             lab = stem if not n_seen else f"{stem}#{n_seen + 1}"
             labels.append(lab)
-            stores.append((lab, s.records()))
+            stores.append((lab, s.iter_records()))
         md = render_compare(stores, title=args.title, k=args.top)
         out = Path(args.out) if args.out else \
             DEFAULT_REPORT_DIR / ("compare_" + "_vs_".join(
@@ -830,7 +947,7 @@ def main(argv: list[str] | None = None) -> int:
 
     if not args.store:
         ap.error("a store path is required (or use --selftest / --compare)")
-    store = ResultStore(args.store)
+    store = open_store(args.store)
     if not len(store):
         ap.error(f"store {args.store} is empty or missing")
     bench = None
@@ -842,8 +959,8 @@ def main(argv: list[str] | None = None) -> int:
     ev_path = events_path_for(args.store)
     events = load_events(ev_path) if ev_path.exists() else None
     title = args.title or f"DSE campaign report — {Path(args.store).name}"
-    md = render_report(store.records(), title=title, bench=bench, k=args.top,
-                       events=events)
+    md = render_report(store.iter_records(), title=title, bench=bench,
+                       k=args.top, events=events)
     out = Path(args.out) if args.out else \
         DEFAULT_REPORT_DIR / f"{Path(args.store).stem}.md"
     out.parent.mkdir(parents=True, exist_ok=True)

@@ -299,9 +299,9 @@ def test_store_backend_filter(tmp_path):
     s.put({"cell_key": "a", "objectives": {}})                    # legacy fpga
     s.put({"cell_key": "b", "backend": "tpu", "objectives": {}})
     assert s.backends() == ["fpga", "tpu"]
-    assert [r["cell_key"] for r in s.records("fpga")] == ["a"]
-    assert [r["cell_key"] for r in s.records("tpu")] == ["b"]
-    assert len(s.records()) == 2
+    assert [r["cell_key"] for r in s.iter_records("fpga")] == ["a"]
+    assert [r["cell_key"] for r in s.iter_records("tpu")] == ["b"]
+    assert len(list(s.iter_records())) == 2
 
 
 # ---------------------------------------------------------------------------

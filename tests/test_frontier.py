@@ -1,0 +1,157 @@
+"""FrontierIndex property tests: the incremental insert-time dominance
+archive must agree with the :mod:`repro.dse.pareto` oracle — same front
+members, same order, same diversity read-off — under seeded random
+insert streams, duplicate vectors, duplicate keys (last-wins
+replacement), and mixed dimensions.
+
+The vectors are drawn from a SMALL integer lattice on purpose: that
+forces exact duplicates, dominance ties, and deep fronts — the cases a
+naive archive gets wrong — far more often than uniform floats would.
+"""
+import numpy as np
+import pytest
+
+from repro.dse.frontier import FrontierIndex
+from repro.dse.pareto import (diverse_front, dominance_split, non_dominated,
+                              nondominated_sort)
+
+
+def lattice_vecs(rng, n, d, side=5):
+    return [tuple(float(x) for x in row)
+            for row in rng.integers(0, side, size=(n, d))]
+
+
+# ---------------------------------------------------------------------------
+# property sweep vs the oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_front_matches_oracle_under_random_stream(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 80))
+    d = int(rng.integers(2, 5))
+    vecs = lattice_vecs(rng, n, d)
+    fi = FrontierIndex()
+    for i, v in enumerate(vecs):
+        on = fi.insert(i, v)
+        assert on == fi.on_front(i)
+    expect = non_dominated(vecs)
+    assert fi.front_keys() == expect
+    assert fi.front_vectors() == [vecs[i] for i in expect]
+    assert fi.front_size() == len(expect)
+    assert len(fi) == n
+    # front 0 of the full NSGA-II sort is the same set (sanity on the
+    # oracle itself)
+    assert nondominated_sort(vecs)[0] == expect
+
+
+@pytest.mark.parametrize("seed", range(15))
+def test_duplicate_keys_last_wins_matches_oracle(seed):
+    rng = np.random.default_rng(1000 + seed)
+    n_keys = int(rng.integers(2, 25))
+    stream = int(rng.integers(n_keys, 120))
+    d = int(rng.integers(2, 4))
+    fi = FrontierIndex()
+    current: dict[int, tuple] = {}
+    for v in lattice_vecs(rng, stream, d):
+        key = int(rng.integers(0, n_keys))
+        fi.insert(key, v)
+        current[key] = v
+        # invariant holds after EVERY insert, not just at the end:
+        # current points in first-appearance key order vs the oracle
+        keys = list(current)
+        vecs = [current[k] for k in keys]
+        assert fi.front_keys() == [keys[i] for i in non_dominated(vecs)]
+    assert len(fi) == len(current)
+    assert fi.inserts == stream
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_diverse_matches_diverse_front(seed):
+    rng = np.random.default_rng(2000 + seed)
+    vecs = lattice_vecs(rng, int(rng.integers(1, 60)), 3)
+    fi = FrontierIndex()
+    for i, v in enumerate(vecs):
+        fi.insert(i, v)
+    assert fi.diverse() == diverse_front(vecs)
+    for k in (1, 2, 5):
+        assert fi.diverse(k) == diverse_front(vecs, k)
+
+
+def test_dominance_split_matches_scalar_oracle():
+    rng = np.random.default_rng(7)
+    for _ in range(50):
+        mat = rng.integers(0, 4, size=(int(rng.integers(0, 12)), 3)) \
+            .astype(float)
+        v = rng.integers(0, 4, size=3).astype(float)
+        dominated, kills = dominance_split(mat, v)
+        from repro.dse.pareto import dominates
+        assert dominated == any(dominates(row, v) for row in mat)
+        assert list(kills) == [dominates(v, row) for row in mat]
+
+
+# ---------------------------------------------------------------------------
+# edge semantics
+# ---------------------------------------------------------------------------
+
+
+def test_duplicate_vectors_coexist_on_front():
+    fi = FrontierIndex()
+    fi.insert("a", (1.0, 2.0))
+    fi.insert("b", (1.0, 2.0))
+    assert fi.front_keys() == ["a", "b"]
+
+
+def test_replacement_resurrects_shadowed_points():
+    fi = FrontierIndex()
+    fi.insert("edge", (3.0, 0.0), payload={"who": "edge"})
+    fi.insert("lo", (1.0, 1.0), payload={"who": "lo"})
+    fi.insert("hi", (2.0, 2.0), payload={"who": "hi"})
+    assert fi.front_keys() == ["edge", "hi"]
+    # last-wins: hi's re-run got worse; lo must come back
+    fi.insert("hi", (0.5, 0.5))
+    assert fi.front_keys() == ["edge", "lo"]
+    assert fi.rebuilds == 1
+    # edge never left the front: its payload survives the rebuild; lo
+    # was shadowed away (payload dropped, O(front) memory) and comes
+    # back payloadless — consumers re-fetch from the store by key
+    assert fi.payload("edge") == {"who": "edge"}
+    assert fi.payload("lo") is None
+
+
+def test_resurrected_member_payload_may_be_none():
+    fi = FrontierIndex()
+    fi.insert("lo", (1.0, 1.0), payload={"who": "lo"})
+    fi.insert("hi", (2.0, 2.0), payload={"who": "hi"})
+    # lo was dominated away -> its payload was dropped (O(front) memory);
+    # after hi degrades, lo is back on the front but payloadless
+    fi.insert("hi", (0.0, 0.0), payload={"who": "hi2"})
+    assert fi.front_keys() == ["lo"]
+    assert fi.payload("lo") is None
+    assert fi.payload("hi") is None  # off-front members never keep one
+
+
+def test_same_key_same_vector_is_geometry_noop():
+    fi = FrontierIndex()
+    fi.insert("a", (1.0, 1.0), payload=1)
+    assert fi.insert("a", (1.0, 1.0), payload=2) is True
+    assert fi.rebuilds == 0
+    assert fi.payload("a") == 2  # live member's payload refreshes
+
+
+def test_dim_mismatch_raises():
+    fi = FrontierIndex()
+    fi.insert("a", (1.0, 2.0))
+    with pytest.raises(ValueError, match="arity mismatch"):
+        fi.insert("b", (1.0, 2.0, 3.0))
+
+
+def test_payloads_only_for_front_members():
+    rng = np.random.default_rng(3)
+    fi = FrontierIndex()
+    for i, v in enumerate(lattice_vecs(rng, 60, 3)):
+        fi.insert(i, v, payload={"i": i})
+    assert set(fi._payloads) == set(fi.front_keys())
+    for key, vec, payload in fi.front():
+        assert payload == {"i": key}

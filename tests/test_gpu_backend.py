@@ -303,21 +303,21 @@ def _mini_stores(tmp_path):
 
 def test_mixed_store_report_gets_cross_backend_section(tmp_path):
     tpu_store, cuda_store = _mini_stores(tmp_path)
-    mixed = [*ResultStore(tpu_store).records(),
-             *ResultStore(cuda_store).records()]
+    mixed = [*ResultStore(tpu_store).iter_records(),
+             *ResultStore(cuda_store).iter_records()]
     md = render_report(mixed)
     assert "## Cross-backend frontier (normalized objectives)" in md
     assert "### Backend champions" in md
     assert "`tflops`" in md
     # single-backend stores do NOT get the section
-    md_single = render_report(ResultStore(tpu_store).records())
+    md_single = render_report(ResultStore(tpu_store).iter_records())
     assert "Cross-backend frontier" not in md_single
 
 
 def test_render_compare_winner_deltas_and_trajectories(tmp_path):
     tpu_store, cuda_store = _mini_stores(tmp_path)
-    md = render_compare([("tpu", ResultStore(tpu_store).records()),
-                         ("cuda", ResultStore(cuda_store).records())])
+    md = render_compare([("tpu", ResultStore(tpu_store).iter_records()),
+                         ("cuda", ResultStore(cuda_store).iter_records())])
     assert "## Per-workload winner deltas" in md
     assert "## Objective trajectories" in md
     assert "## Cross-backend frontier (normalized objectives)" in md
@@ -325,7 +325,7 @@ def test_render_compare_winner_deltas_and_trajectories(tmp_path):
     assert "xlstm-350m/train_4k" in md
     assert "| winner |" not in md.split("Per-workload winner deltas")[0]
     with pytest.raises(ValueError):
-        render_compare([("only", ResultStore(tpu_store).records())])
+        render_compare([("only", ResultStore(tpu_store).iter_records())])
 
 
 def test_report_compare_cli(tmp_path):

@@ -305,18 +305,18 @@ def test_mixed_store_resume_is_placement_stable(tmp_path):
 
 def test_ensure_coverage_fills_only_the_gap(tmp_path):
     store = ResultStore(tmp_path / "cov.jsonl")
-    known = candidates_by_workload(store.records(), "tflops")
+    known = candidates_by_workload(store.iter_records(), "tflops")
     filled = ensure_coverage(["xlstm-350m/decode_32k"], store, known)
     assert filled == ["xlstm-350m/decode_32k"]
-    recs = store.records()
+    recs = list(store.iter_records())
     assert recs and all(
         get_backend(r["backend"]).group_key(r) == "xlstm-350m/decode_32k"
         for r in recs)
     assert {r["backend"] for r in recs} == {"tpu", "cuda"}
     # now covered: a second pass evaluates nothing
-    known = candidates_by_workload(store.records(), "tflops")
+    known = candidates_by_workload(store.iter_records(), "tflops")
     assert ensure_coverage(["xlstm-350m/decode_32k"], store, known) == []
-    res = place(["xlstm-350m/decode_32k"], store.records(),
+    res = place(["xlstm-350m/decode_32k"], list(store.iter_records()),
                 CostEnvelope(watts=30000.0))
     assert res.assignments[0].candidate.workload == "xlstm-350m/decode_32k"
 

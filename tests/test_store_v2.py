@@ -1,0 +1,177 @@
+"""Store v2 tests: sharded layout, streaming reader, compaction, no-op
+put skipping, migration, and — above all — that v1 single-file stores
+keep working byte-for-byte.
+
+The multi-worker claim under test: two campaign processes appending to
+their own shards of one ``<store>.d/`` directory must produce the SAME
+report (modulo ``search_time_s`` timing) as one process writing a v1
+file, and a resumed run against either layout reuses every cell.
+"""
+import json
+import warnings
+from pathlib import Path
+
+import pytest
+
+from repro.dse.campaign import expand_cells, run_campaign
+from repro.dse.store import (CampaignStore, ResultStore, main as store_main,
+                             open_store, shard_name, sharded_dir_for)
+
+CELLS = expand_cells(["vgg16"], [(224, 224)], ["ku115", "zcu102"], [16], [1])
+FAST = dict(population=4, iterations=2)
+
+
+def scrub(rec):
+    """A record with volatile timing removed (everything else must be
+    bit-stable across layouts and resumes)."""
+    return {k: v for k, v in rec.items() if k != "search_time_s"}
+
+
+# ---------------------------------------------------------------------------
+# v1 compatibility
+# ---------------------------------------------------------------------------
+
+
+def test_v1_resume_is_byte_identical(tmp_path):
+    p = tmp_path / "v1.jsonl"
+    r1 = run_campaign(CELLS, str(p), **FAST)
+    blob = p.read_bytes()
+    r2 = run_campaign(CELLS, str(p), **FAST)
+    assert p.read_bytes() == blob          # resume appended NOTHING
+    assert r2.reused_cells == len(CELLS)
+    assert r2.new_evaluations == 0
+    assert [scrub(a) for a in r1.records] == [scrub(b) for b in r2.records]
+
+
+def test_v1_handwritten_file_streams_in_order(tmp_path):
+    p = tmp_path / "legacy.jsonl"
+    rows = [{"cell_key": f"k{i}", "i": i} for i in range(5)]
+    rows.append({"cell_key": "k1", "i": 99})   # last-wins rewrite
+    p.write_text("".join(json.dumps(r, sort_keys=True) + "\n" for r in rows))
+    s = open_store(str(p))
+    assert not s.sharded
+    got = list(s.iter_records())
+    assert [r["cell_key"] for r in got] == ["k0", "k1", "k2", "k3", "k4"]
+    assert s.get("k1") == {"cell_key": "k1", "i": 99}   # last wins
+    assert len(s) == 5
+
+
+def test_records_emits_deprecation_warning(tmp_path):
+    p = tmp_path / "v1.jsonl"
+    s = ResultStore(p)
+    s.put({"cell_key": "a", "v": 1})
+    with pytest.warns(DeprecationWarning, match="iter_records"):
+        recs = s.records()
+    assert recs == [{"cell_key": "a", "v": 1}]
+
+
+# ---------------------------------------------------------------------------
+# no-op puts
+# ---------------------------------------------------------------------------
+
+
+def test_noop_put_skips_append(tmp_path):
+    p = tmp_path / "v1.jsonl"
+    s = CampaignStore(p)
+    s.put({"cell_key": "a", "v": 1})
+    blob = p.read_bytes()
+    s.put({"cell_key": "a", "v": 1})       # identical -> skipped
+    assert p.read_bytes() == blob
+    assert s.noop_puts == 1
+    s.put({"cell_key": "a", "v": 2})       # changed -> appended
+    assert p.read_bytes() != blob
+    assert s.noop_puts == 1
+    assert s.get("a") == {"cell_key": "a", "v": 2}
+
+
+# ---------------------------------------------------------------------------
+# sharded layout
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_two_workers_match_single_file(tmp_path):
+    single = run_campaign(CELLS, str(tmp_path / "one.jsonl"), **FAST)
+    shared = str(tmp_path / "multi.d")
+    # two "hosts", each appending its slice to its own shard
+    run_campaign(CELLS[:1], shared, shard=0, **FAST)
+    run_campaign(CELLS[1:], shared, shard=1, **FAST)
+    d = sharded_dir_for(Path(shared))
+    assert (d / shard_name(0)).exists() and (d / shard_name(1)).exists()
+    # a resumed full run against the merged shards reuses everything...
+    merged = run_campaign(CELLS, shared, shard=0, **FAST)
+    assert merged.reused_cells == len(CELLS)
+    assert merged.new_evaluations == 0
+    # ...and reports exactly what the single-file campaign reported
+    assert [scrub(r) for r in merged.records] == \
+        [scrub(r) for r in single.records]
+
+
+def test_auto_layout_detection(tmp_path):
+    d = tmp_path / "store.d"
+    s = open_store(str(d), shard=3)
+    s.put({"cell_key": "a", "v": 1})
+    assert s.sharded
+    assert (d / shard_name(3)).exists()
+    # plain path next to an existing .d dir resolves to the dir
+    s2 = open_store(str(tmp_path / "store"))
+    assert s2.sharded
+    assert s2.get("a") == {"cell_key": "a", "v": 1}
+
+
+def test_compact_is_last_wins_and_idempotent(tmp_path):
+    shared = str(tmp_path / "c.d")
+    s0 = open_store(shared, shard=0)
+    s1 = open_store(shared, shard=1)
+    for i in range(20):
+        s0.put({"cell_key": f"k{i}", "v": i})
+    for i in range(5, 15):
+        s1.put({"cell_key": f"k{i}", "v": 100 + i})
+    fresh = open_store(shared, shard=0)
+    before = [(r["cell_key"], r["v"]) for r in fresh.iter_records()]
+    n = fresh.compact()
+    assert n == 20
+    d = sharded_dir_for(Path(shared))
+    assert sorted(f.name for f in d.glob("shard-*.jsonl")) == [shard_name(0)]
+    after = [(r["cell_key"], r["v"]) for r in fresh.iter_records()]
+    assert after == before
+    blob = (d / shard_name(0)).read_bytes()
+    assert fresh.compact() == 20           # idempotent
+    assert (d / shard_name(0)).read_bytes() == blob
+    # a reopened store sees the same records
+    again = open_store(shared)
+    assert [(r["cell_key"], r["v"]) for r in again.iter_records()] == before
+
+
+def test_compact_cli_and_report_stability(tmp_path, capsys):
+    from repro.dse.report import render_report
+    shared = str(tmp_path / "r.d")
+    run_campaign(CELLS[:1], shared, shard=0, **FAST)
+    run_campaign(CELLS[1:], shared, shard=1, **FAST)
+    before = render_report(open_store(shared).iter_records(),
+                           title="compaction check")
+    assert store_main(["compact", shared]) == 0
+    capsys.readouterr()
+    after = render_report(open_store(shared).iter_records(),
+                          title="compaction check")
+    assert after == before
+
+
+def test_migrate_cli_v1_to_sharded(tmp_path, capsys):
+    src = tmp_path / "src.jsonl"
+    s = CampaignStore(src)
+    for i in range(7):
+        s.put({"cell_key": f"k{i}", "v": i})
+    dst = tmp_path / "dst.d"
+    assert store_main(["migrate", str(src), str(dst)]) == 0
+    capsys.readouterr()
+    out = open_store(str(dst))
+    assert out.sharded
+    assert [r["v"] for r in out.iter_records()] == list(range(7))
+
+
+def test_info_cli(tmp_path, capsys):
+    p = tmp_path / "v1.jsonl"
+    CampaignStore(p).put({"cell_key": "a", "v": 1})
+    assert store_main(["info", str(p)]) == 0
+    out = capsys.readouterr().out
+    assert "v1" in out and "1" in out
