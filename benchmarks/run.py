@@ -508,6 +508,26 @@ def bench_screen_cells_jax() -> list[dict]:
                     f"speedup={us_np / us_jax:.1f}x;bit_equal={exact}")}]
 
 
+def bench_calib_fit() -> list[dict]:
+    """repro.calib: fit per-part corrections on the committed fixture
+    measurement set and render the error table — the docs-job smoke path.
+    Headline: every part's calibrated error must come in at or under its
+    raw error (the geomean fit guarantees it; ``all_improved`` gates)."""
+    from repro.calib import error_rows, fit_corrections, fixture_measurements
+
+    ms = fixture_measurements()
+    cal, us = _timed(fit_corrections, ms)
+    rows = error_rows(cal)
+    improved = all(r["cal_err_pct"] <= r["raw_err_pct"] + 1e-9 for r in rows)
+    worst = max((r["cal_err_pct"] for r in rows), default=0.0)
+    return [{
+        "name": "calib_fit", "us_per_call": us,
+        "derived": (f"parts={len(cal.parts())};meas={len(ms)};"
+                    f"fingerprint={cal.fingerprint()};"
+                    f"worst_cal_err_pct={worst:.2f};"
+                    f"all_improved={improved}")}]
+
+
 BENCHES = {
     "fig1": bench_fig1_ctc,
     "table1": bench_table1_variance,
@@ -524,6 +544,7 @@ BENCHES = {
     "campaign_placement": bench_placement,
     "campaign_100k": bench_campaign_100k,
     "screen_jax": bench_screen_cells_jax,
+    "calib_fit": bench_calib_fit,
     "roofline": bench_roofline,
 }
 

@@ -1,0 +1,36 @@
+"""Measurement-grounded calibration: close the predicted-vs-measured loop.
+
+The analytical models driving every campaign (the FPGA pipeline model,
+``core/tpu_planner``, the GPU roofline) are napkin math until they are
+held against measurements — DNNExplorer's own credibility rests on its
+Table 3 board results, and HybridDNN validates its latency model before
+trusting its DSE. This package gives the repo the same discipline:
+
+* :mod:`repro.calib.calibration` — ``Provenance`` / ``Correction`` /
+  ``Calibration``: per-part compute-rate and bandwidth multipliers with
+  provenance (source, date, measurement kind), applied to ``hw_specs``
+  specs via :func:`repro.core.hw_specs.scaled_spec`. The default is
+  identity — uncalibrated runs stay byte-identical.
+* :mod:`repro.calib.measure` — the three measurement sources feeding one
+  fit: exact-HLO dryrun costs (``launch/hlo_cost.py`` artifacts), the
+  repo's own microbench rows (``benchmarks/run.py --json``), and the
+  committed published table (:mod:`repro.calib.published`).
+* :mod:`repro.calib.fit` — geometric-mean fitting (minimizes RMS log
+  error, so the calibrated error can never exceed the raw error on the
+  fitted set) and the predicted-vs-measured error table.
+
+CLI: ``python -m repro.calib fit|show|validate|example``.
+"""
+from .calibration import (Calibration, Correction, IDENTITY,  # noqa: F401
+                          Provenance)
+from .fit import error_rows, fit_corrections, validate_calibration
+from .measure import (Measurement, bench_measurements, fixture_measurements,
+                      hlo_dryrun_measurements)
+from .published import published_measurements
+
+__all__ = [
+    "Calibration", "Correction", "IDENTITY", "Measurement", "Provenance",
+    "bench_measurements", "error_rows", "fit_corrections",
+    "fixture_measurements", "hlo_dryrun_measurements",
+    "published_measurements", "validate_calibration",
+]

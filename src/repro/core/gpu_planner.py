@@ -52,11 +52,18 @@ class GPUPlan:
 
 def evaluate_point(cfg: ArchConfig, shape: ShapeSpec, gpus: int, dp: int,
                    tp: int, remat: str, microbatches: int,
-                   hw: GPUSpec = A100_80G) -> GPUPlan:
+                   hw: GPUSpec = A100_80G, calibration=None) -> GPUPlan:
     """Score ONE (mesh x remat x microbatch) mapping on one GPU part with
     the analytic roofline — the single-design evaluation the ``cuda``
     campaign backend loops over, mirroring
-    :func:`repro.core.tpu_planner.evaluate_point`."""
+    :func:`repro.core.tpu_planner.evaluate_point`.
+
+    ``calibration`` (a :class:`repro.calib.Calibration`, duck-typed via
+    ``for_spec``) rescales ``hw`` to measured delivered rates before any
+    model math; ``None`` — the default — evaluates against the datasheet
+    spec exactly as before."""
+    if calibration is not None:
+        hw = calibration.for_spec(hw)
     mesh = MeshDesc(gpus, dp, tp)
     rl = analytic_roofline(cfg, shape, mesh, hw)
     if remat != "full" and shape.kind == "train":

@@ -76,6 +76,30 @@ def pod_cost(spec, count: int = 1) -> tuple[float, float]:
     return count * spec.tdp_watts, count * spec.usd_per_hour
 
 
+def scaled_spec(spec, compute_scale: float = 1.0, bw_scale: float = 1.0):
+    """A copy of ``spec`` with its delivered compute rate and external
+    memory bandwidth multiplied by measured correction factors — the hook
+    :mod:`repro.calib` applies fitted corrections through. Family-aware:
+
+    * ``FPGASpec`` — compute scales the clock (Eq. 1's ``freq`` term, the
+      one knob that moves every pipeline/generic latency together),
+      bandwidth scales ``bw_gbps``;
+    * ``TPUSpec`` / ``GPUSpec`` — compute scales ``peak_flops``,
+      bandwidth scales ``hbm_bw``.
+
+    Identity scales return ``spec`` itself (not a copy), so uncalibrated
+    paths stay byte-identical to passing the table spec directly."""
+    if compute_scale == 1.0 and bw_scale == 1.0:
+        return spec
+    if isinstance(spec, FPGASpec):
+        return dataclasses.replace(spec, freq_mhz=spec.freq_mhz * compute_scale,
+                                   bw_gbps=spec.bw_gbps * bw_scale)
+    if isinstance(spec, (TPUSpec, GPUSpec)):
+        return dataclasses.replace(spec, peak_flops=spec.peak_flops * compute_scale,
+                                   hbm_bw=spec.hbm_bw * bw_scale)
+    raise TypeError(f"scaled_spec: unknown spec family {type(spec).__name__}")
+
+
 # ---------------------------------------------------------------------------
 # FPGA (faithful reproduction domain)
 # ---------------------------------------------------------------------------

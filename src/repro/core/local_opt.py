@@ -73,7 +73,8 @@ def _segment_after(net: NetInfo, sp: int) -> list[LayerInfo]:
 
 
 def evaluate_rav(net: NetInfo, fpga: FPGASpec, rav: RAV, dw: int = 16,
-                 ww: int = 16, max_rollbacks: int = 12) -> DesignPoint:
+                 ww: int = 16, max_rollbacks: int = 12,
+                 calibration=None) -> DesignPoint:
     """Algorithms 2+3 for one RAV. Deterministic, pure.
 
     This is the scalar *reference* implementation: readable, paper-shaped,
@@ -82,7 +83,17 @@ def evaluate_rav(net: NetInfo, fpga: FPGASpec, rav: RAV, dw: int = 16,
     evaluate_rav_batch`), which must agree with this function on every
     discrete decision and to <=1e-9 relative on float objectives
     (``tests/test_batch_eval.py`` enforces it); the winning RAV is always
-    re-evaluated here."""
+    re-evaluated here.
+
+    ``calibration`` (a :class:`repro.calib.Calibration`, duck-typed via
+    ``for_spec``) rescales the part's clock and bandwidth to measured
+    delivered rates before anything is modeled; ``None`` — the default —
+    evaluates against the datasheet spec exactly as before. Callers that
+    batch-evaluate (the PSO) apply the same rescale once, up front, via
+    ``calibration.for_spec`` so the scalar and batched twins stay in
+    lockstep."""
+    if calibration is not None:
+        fpga = calibration.for_spec(fpga)
     freq = fpga.freq
     majors = net.major_layers
     sp = max(0, min(rav.sp, len(majors)))

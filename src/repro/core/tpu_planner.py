@@ -88,10 +88,17 @@ def candidate_meshes(max_chips: int = 256):
 
 def evaluate_point(cfg: ArchConfig, shape: ShapeSpec, chips: int, dp: int,
                    tp: int, remat: str, microbatches: int,
-                   hw: TPUSpec = TPU_V5E) -> Plan:
+                   hw: TPUSpec = TPU_V5E, calibration=None) -> Plan:
     """Score ONE (mesh x remat x microbatch) mapping with the analytic
     roofline — the single-design evaluation both :func:`plan_arch` and the
-    ``repro.dse`` TPU campaign backend loop over."""
+    ``repro.dse`` TPU campaign backend loop over.
+
+    ``calibration`` (a :class:`repro.calib.Calibration`, duck-typed via
+    ``for_spec``) rescales ``hw`` to measured delivered rates before any
+    model math; ``None`` — the default — evaluates against the datasheet
+    spec exactly as before."""
+    if calibration is not None:
+        hw = calibration.for_spec(hw)
     mesh = MeshDesc(chips, dp, tp)
     rl = analytic_roofline(cfg, shape, mesh, hw)
     if remat != "full" and shape.kind == "train":

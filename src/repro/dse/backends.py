@@ -186,20 +186,31 @@ class Backend(abc.ABC):
                  iterations: int = 30,
                  weights: Mapping[str, float] | None = None,
                  searcher: str = "pso",
-                 searcher_config: Mapping | None = None) -> dict:
+                 searcher_config: Mapping | None = None,
+                 calibration=None) -> dict:
         """Evaluate ONE cell -> a JSONL store record. ``searcher`` /
         ``searcher_config`` select the engine on backends that search
         (ignored by exhaustive enumerators, which accept only the
         default — :func:`repro.dse.campaign.run_campaign` rejects the
-        rest up front)."""
+        rest up front). ``calibration`` (a
+        :class:`repro.calib.Calibration`) rescales the cell's hardware
+        spec to measured delivered rates before evaluation and stamps a
+        ``calibration`` provenance block on the record; ``None`` / the
+        identity calibration evaluate byte-identically to pre-calibration
+        behavior."""
 
     @abc.abstractmethod
     def search_config(self, *, base_seed: int, population: int,
                       iterations: int,
                       weights: Mapping[str, float] | None,
                       searcher: str = "pso",
-                      searcher_config: Mapping | None = None) -> dict:
-        """The settings a record was searched with (resume-match key)."""
+                      searcher_config: Mapping | None = None,
+                      calibration=None) -> dict:
+        """The settings a record was searched with (resume-match key).
+        A non-identity ``calibration`` contributes its fingerprint, so a
+        store searched under one set of correction factors never silently
+        serves a campaign run under another; identity contributes nothing
+        (legacy stores resume byte-for-byte)."""
 
     # -- presentation --------------------------------------------------------
 
@@ -293,16 +304,19 @@ class FPGABackend(Backend):
 
     def run_cell(self, cell, *, base_seed=0, population=20, iterations=30,
                  weights=None, searcher="pso", searcher_config=None,
-                 screen_fits=None) -> dict:
+                 screen_fits=None, calibration=None) -> dict:
         from .campaign import run_cell
         return run_cell(cell, base_seed, population, iterations, weights,
-                        searcher, searcher_config, screen_fits)
+                        searcher, searcher_config, screen_fits,
+                        calibration=calibration)
 
     def search_config(self, *, base_seed, population, iterations,
-                      weights, searcher="pso", searcher_config=None) -> dict:
+                      weights, searcher="pso", searcher_config=None,
+                      calibration=None) -> dict:
         from .campaign import _search_config
         return _search_config(base_seed, population, iterations, weights,
-                              searcher, searcher_config)
+                              searcher, searcher_config,
+                              calibration=calibration)
 
     def normalized(self, rec: Mapping) -> dict:
         """GOP/s -> TFLOP/s against the board's power/price and the
@@ -424,6 +438,16 @@ def enumeration_trace(evaluated: int) -> dict:
             "evaluations": evaluated, "cache_hits": 0}
 
 
+def stamp_calibration(cfg: dict, calibration) -> dict:
+    """Add a non-identity calibration's fingerprint to a search-config
+    dict (the resume-match key). Identity / ``None`` add nothing, so
+    uncalibrated search configs — and therefore every pre-calibration
+    store — stay byte-identical."""
+    if calibration is not None and not calibration.is_identity():
+        cfg["calibration"] = calibration.fingerprint()
+    return cfg
+
+
 def _arch_shape(workload_key: str) -> tuple[str, str] | None:
     """``arch/shape`` workload key -> (arch, shape), or None if the key
     isn't in the tpu/cuda key space (both families share it by design)."""
@@ -534,7 +558,7 @@ class TPUBackend(Backend):
 
     def run_cell(self, cell: TPUCell, *, base_seed=0, population=20,
                  iterations=30, weights=None, searcher="pso",
-                 searcher_config=None) -> dict:
+                 searcher_config=None, calibration=None) -> dict:
         """Enumerate the (dp, tp) factorizations of the cell's chip count;
         keep the best mapping: feasible first, then highest scalarized
         objective (ties to the earlier factorization — smaller tp)."""
@@ -546,7 +570,8 @@ class TPUBackend(Backend):
             if shape.global_batch % dp:
                 continue
             plan = evaluate_point(cfg, shape, cell.chips, dp, tp,
-                                  cell.remat, cell.microbatches)
+                                  cell.remat, cell.microbatches,
+                                  calibration=calibration)
             evaluated += 1
             obj = self._plan_objectives(cell, plan)
             # rank ignoring the feasibility gate (an all-infeasible cell
@@ -561,7 +586,7 @@ class TPUBackend(Backend):
             raise ValueError(f"no valid dp x tp factorization for {cell.key} "
                              f"(global_batch={shape.global_batch})")
         plan, obj = best
-        return {
+        rec = {
             "schema": SCHEMA_VERSION,
             "backend": self.name,
             "cell_key": cell.key,
@@ -570,7 +595,8 @@ class TPUBackend(Backend):
             "search": self.search_config(base_seed=base_seed,
                                          population=population,
                                          iterations=iterations,
-                                         weights=weights),
+                                         weights=weights,
+                                         calibration=calibration),
             "plan": {"dp": plan.dp, "tp": plan.tp,
                      "bound": plan.roofline.bound},
             "objectives": obj,
@@ -580,6 +606,10 @@ class TPUBackend(Backend):
             "weights": dict(weights) if weights else None,
             "trace": enumeration_trace(evaluated),
         }
+        info = calibration.record_info(TPU_V5E.name) if calibration else None
+        if info:
+            rec["calibration"] = info
+        return rec
 
     @staticmethod
     def _plan_objectives(cell: TPUCell, plan) -> dict:
@@ -592,13 +622,16 @@ class TPUBackend(Backend):
         }
 
     def search_config(self, *, base_seed, population, iterations,
-                      weights, searcher="pso", searcher_config=None) -> dict:
+                      weights, searcher="pso", searcher_config=None,
+                      calibration=None) -> dict:
         """The planner enumerates its space exhaustively and
         deterministically, so search-engine knobs and seeds are
         irrelevant here; only the scalarization (which picks the
-        per-cell mapping) invalidates stored cells."""
-        return {"weights": {k: float(v) for k, v in weights.items()}
-                if weights else None}
+        per-cell mapping) and a non-identity calibration (which moves
+        every modeled time) invalidate stored cells."""
+        return stamp_calibration(
+            {"weights": {k: float(v) for k, v in weights.items()}
+             if weights else None}, calibration)
 
     def normalized(self, rec: Mapping) -> dict:
         """Delivered TFLOP/s from the stored MFU (useful FLOPs / step over
@@ -759,7 +792,7 @@ class CUDABackend(Backend):
 
     def run_cell(self, cell: CUDACell, *, base_seed=0, population=20,
                  iterations=30, weights=None, searcher="pso",
-                 searcher_config=None) -> dict:
+                 searcher_config=None, calibration=None) -> dict:
         """Enumerate the (dp, tp) factorizations of the cell's GPU count
         on the cell's part; keep the best mapping: feasible first, then
         highest scalarized objective (ties to the smaller tp)."""
@@ -773,7 +806,7 @@ class CUDABackend(Backend):
                 continue
             plan = gpu_planner.evaluate_point(cfg, shape, cell.gpus, dp, tp,
                                               cell.remat, cell.microbatches,
-                                              hw)
+                                              hw, calibration=calibration)
             evaluated += 1
             obj = self._plan_objectives(cell, plan, hw)
             # rank ignoring the feasibility gate (an all-infeasible cell
@@ -788,7 +821,7 @@ class CUDABackend(Backend):
             raise ValueError(f"no valid dp x tp factorization for {cell.key} "
                              f"(global_batch={shape.global_batch})")
         plan, obj = best
-        return {
+        rec = {
             "schema": SCHEMA_VERSION,
             "backend": self.name,
             "cell_key": cell.key,
@@ -797,7 +830,8 @@ class CUDABackend(Backend):
             "search": self.search_config(base_seed=base_seed,
                                          population=population,
                                          iterations=iterations,
-                                         weights=weights),
+                                         weights=weights,
+                                         calibration=calibration),
             "plan": {"dp": plan.dp, "tp": plan.tp,
                      "bound": plan.roofline.bound},
             "objectives": obj,
@@ -807,6 +841,10 @@ class CUDABackend(Backend):
             "weights": dict(weights) if weights else None,
             "trace": enumeration_trace(evaluated),
         }
+        info = calibration.record_info(cell.gpu) if calibration else None
+        if info:
+            rec["calibration"] = info
+        return rec
 
     @staticmethod
     def _plan_objectives(cell: CUDACell, plan, hw) -> dict:
@@ -820,12 +858,14 @@ class CUDABackend(Backend):
         }
 
     def search_config(self, *, base_seed, population, iterations,
-                      weights, searcher="pso", searcher_config=None) -> dict:
+                      weights, searcher="pso", searcher_config=None,
+                      calibration=None) -> dict:
         """Deterministic exhaustive enumeration, like the TPU backend:
-        only the scalarization (which picks the per-cell mapping)
-        invalidates stored cells."""
-        return {"weights": {k: float(v) for k, v in weights.items()}
-                if weights else None}
+        only the scalarization (which picks the per-cell mapping) and a
+        non-identity calibration invalidate stored cells."""
+        return stamp_calibration(
+            {"weights": {k: float(v) for k, v in weights.items()}
+             if weights else None}, calibration)
 
     def normalized(self, rec: Mapping) -> dict:
         """Delivered TFLOP/s from the stored MFU against the pod's
@@ -928,7 +968,7 @@ def run_cell_by_backend(backend_name: str, cell, base_seed: int,
                         obs: Mapping | None = None,
                         searcher: str = "pso",
                         searcher_config: Mapping | None = None,
-                        screen_fits=None) -> dict:
+                        screen_fits=None, calibration=None) -> dict:
     """Top-level (picklable) pool entry point: resolve the backend by name
     in the worker and evaluate one cell.
 
@@ -943,14 +983,16 @@ def run_cell_by_backend(backend_name: str, cell, base_seed: int,
     ``screen_fits`` forwards the cell's precomputed rung-0 screening
     fitnesses (:func:`repro.dse.campaign.prescreen_cells_jax`) and is
     only ever non-None for the fpga backend — the exhaustive
-    enumerators never see the keyword."""
+    enumerators never see the keyword. ``calibration`` (picklable)
+    forwards the campaign's correction factors into the worker."""
     be = get_backend(backend_name)
     kw = {} if screen_fits is None else {"screen_fits": screen_fits}
     if not obs:
         return be.run_cell(cell, base_seed=base_seed, population=population,
                            iterations=iterations, weights=weights,
                            searcher=searcher,
-                           searcher_config=searcher_config, **kw)
+                           searcher_config=searcher_config,
+                           calibration=calibration, **kw)
     from repro.obs import worker_tracer
     with worker_tracer(obs["events_dir"]) as tracer:
         tracer.span_at("queue.wait", obs["t_submit"],
@@ -961,7 +1003,8 @@ def run_cell_by_backend(backend_name: str, cell, base_seed: int,
                                   population=population,
                                   iterations=iterations, weights=weights,
                                   searcher=searcher,
-                                  searcher_config=searcher_config, **kw)
+                                  searcher_config=searcher_config,
+                                  calibration=calibration, **kw)
             if backend_name == "fpga":
                 from repro.core.batch_eval import cache_stats
                 for cache, st in cache_stats().items():

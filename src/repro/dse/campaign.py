@@ -114,7 +114,8 @@ def cell_seed(base_seed: int, cell: CampaignCell) -> int:
 def _search_config(base_seed: int, population: int, iterations: int,
                    weights: Mapping[str, float] | None,
                    searcher: str = "pso",
-                   searcher_config: Mapping | None = None) -> dict:
+                   searcher_config: Mapping | None = None,
+                   calibration=None) -> dict:
     """What a record was searched *with*. Stored per record and compared on
     resume, so a store never silently serves results found under different
     search settings or objective weights — including a different search
@@ -122,7 +123,9 @@ def _search_config(base_seed: int, population: int, iterations: int,
     instead of mixing results. JSON-native values only (the dict must
     survive a json round trip unchanged). The ``searcher`` keys are only
     present when non-default, so PR-1 stores (written before engines were
-    pluggable) still resume byte-for-byte under the default PSO."""
+    pluggable) still resume byte-for-byte under the default PSO; likewise
+    a ``calibration`` key appears only for a non-identity calibration
+    (its fingerprint — corrected and uncorrected results never mix)."""
     cfg = {"base_seed": int(base_seed), "population": int(population),
            "iterations": int(iterations),
            "weights": {k: float(v) for k, v in weights.items()} if weights
@@ -131,7 +134,8 @@ def _search_config(base_seed: int, population: int, iterations: int,
         cfg["searcher"] = searcher
         cfg["searcher_config"] = dict(searcher_config) \
             if searcher_config else None
-    return cfg
+    from .backends import stamp_calibration
+    return stamp_calibration(cfg, calibration)
 
 
 def run_cell(cell: CampaignCell, base_seed: int = 0, population: int = 20,
@@ -139,13 +143,19 @@ def run_cell(cell: CampaignCell, base_seed: int = 0, population: int = 20,
              weights: Mapping[str, float] | None = None,
              searcher: str = "pso",
              searcher_config: Mapping | None = None,
-             screen_fits=None) -> dict:
+             screen_fits=None, calibration=None) -> dict:
     """One full explore() for one cell -> a store record. Top-level (and all
     arguments picklable) so ProcessPoolExecutor can ship it to workers.
     ``screen_fits`` optionally carries this cell's precomputed rung-0
-    screening fitnesses (:func:`prescreen_cells_jax`)."""
+    screening fitnesses (:func:`prescreen_cells_jax`). ``calibration``
+    (a :class:`repro.calib.Calibration`) rescales the board's clock and
+    bandwidth to measured delivered rates before the search — every
+    evaluation inside :func:`repro.core.explore` (scalar reference and
+    batched engine alike) then sees the corrected part."""
     net = build_net(cell.net, cell.h, cell.w)
     fpga = FPGAS[cell.fpga]
+    if calibration is not None:
+        fpga = calibration.for_spec(fpga)
     cfg = PSOConfig(population=population, iterations=iterations,
                     seed=cell_seed(base_seed, cell))
     res = explore(net, fpga, dw=cell.precision, ww=cell.precision,
@@ -154,13 +164,13 @@ def run_cell(cell: CampaignCell, base_seed: int = 0, population: int = 20,
                   searcher=searcher, searcher_config=searcher_config,
                   screen_fits=screen_fits)
     d = res.design
-    return {
+    rec = {
         "schema": SCHEMA_VERSION,
         "cell_key": cell.key,
         "cell": dataclasses.asdict(cell),
         "net_name": net.name,
         "search": _search_config(base_seed, population, iterations, weights,
-                                 searcher, searcher_config),
+                                 searcher, searcher_config, calibration),
         "seed": cfg.seed,
         "rav": dataclasses.asdict(d.rav),
         "rav_hash": rav_hash(d.rav),
@@ -172,13 +182,17 @@ def run_cell(cell: CampaignCell, base_seed: int = 0, population: int = 20,
         "weights": dict(weights) if weights else None,
         "trace": res.convergence_trace(),
     }
+    info = calibration.record_info(cell.fpga) if calibration else None
+    if info:
+        rec["calibration"] = info
+    return rec
 
 
 def prescreen_cells_jax(cells: Sequence[CampaignCell], *,
                         base_seed: int = 0, population: int = 20,
                         iterations: int = 30,
                         searcher_config: Mapping | None = None,
-                        ) -> dict | None:
+                        calibration=None) -> dict | None:
     """Screen every cell's hyperband rung 0 in ONE jitted jax call.
 
     Reproduces each cell's :class:`~repro.core.search.HyperbandConfig`
@@ -202,6 +216,10 @@ def prescreen_cells_jax(cells: Sequence[CampaignCell], *,
     for cell in cells:
         net = build_net(cell.net, cell.h, cell.w)
         fpga = FPGAS[cell.fpga]
+        if calibration is not None:
+            # same corrected part run_cell will search, so the screening
+            # fitnesses match the engine's own rung-0 evaluations
+            fpga = calibration.for_spec(fpga)
         pso = PSOConfig(population=population, iterations=iterations,
                         seed=cell_seed(base_seed, cell))
         cfg = searcher_config_for(
@@ -302,6 +320,7 @@ def run_campaign(cells: Iterable,
                  searcher_config: Mapping | None = None,
                  shard: int | str = 0,
                  jax_screen: bool = False,
+                 calibration=None,
                  ) -> CampaignReport:
     """Run (or resume) a campaign against a JSONL store.
 
@@ -347,6 +366,13 @@ def run_campaign(cells: Iterable,
     each cell its slice — results are bit-identical to the per-cell
     NumPy screen, which also remains the silent fallback when jax is
     not importable.
+
+    ``calibration`` (a :class:`repro.calib.Calibration`) applies fitted
+    per-part correction factors to every hardware spec the cells are
+    evaluated against and stamps each record with the factors' provenance;
+    its fingerprint joins the stored search config, so calibrated and
+    uncalibrated results never mix on resume. ``None`` (the default) and
+    the identity calibration are byte-identical to pre-calibration runs.
     """
     from .backends import get_backend, run_cell_by_backend
     be = get_backend(backend)
@@ -373,7 +399,8 @@ def run_campaign(cells: Iterable,
     search = be.search_config(base_seed=base_seed, population=population,
                               iterations=iterations, weights=weights,
                               searcher=searcher,
-                              searcher_config=searcher_config)
+                              searcher_config=searcher_config,
+                              calibration=calibration)
     # A stored cell counts as done only if it was searched with the same
     # settings; a config change re-runs (and overwrites) stale records.
     todo = [c for c in cells
@@ -395,7 +422,8 @@ def run_campaign(cells: Iterable,
             with tracer.span("screen.jax", cells=len(todo)):
                 fits = prescreen_cells_jax(
                     todo, base_seed=base_seed, population=population,
-                    iterations=iterations, searcher_config=searcher_config)
+                    iterations=iterations, searcher_config=searcher_config,
+                    calibration=calibration)
             if fits is None:
                 say("jax unavailable — cells fall back to the per-cell "
                     "NumPy screen (identical results)")
@@ -445,7 +473,8 @@ def run_campaign(cells: Iterable,
                                      base_seed, population, iterations,
                                      weights, obs, searcher,
                                      searcher_config,
-                                     screen_fits.get(c.key))] = c
+                                     screen_fits.get(c.key),
+                                     calibration)] = c
                 inflight = len(futs)
                 tracer.gauge("pool.inflight", inflight, workers=workers)
                 for fut in as_completed(futs):
@@ -464,6 +493,7 @@ def run_campaign(cells: Iterable,
                                           weights=weights,
                                           searcher=searcher,
                                           searcher_config=searcher_config,
+                                          calibration=calibration,
                                           **kw)
                 finish(c, rec)
 

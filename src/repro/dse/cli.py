@@ -110,6 +110,12 @@ def main(argv: list[str] | None = None) -> CampaignReport:
                          "(fpga backend + --searcher hyperband only; "
                          "bit-identical to the per-cell NumPy screen, "
                          "which stays the fallback when jax is missing)")
+    ap.add_argument("--calibration", default=None, metavar="JSON",
+                    help="apply a fitted calibration (python -m repro.calib "
+                         "fit) to every hardware spec the cells evaluate "
+                         "against; its fingerprint joins the stored search "
+                         "config, so calibrated and uncalibrated results "
+                         "never mix on resume")
     ap.add_argument("--weights", default="",
                     help="scalarization, e.g. throughput_ips=1,dsp_eff=500 "
                          "(fpga default: throughput only, the paper's "
@@ -137,6 +143,13 @@ def main(argv: list[str] | None = None) -> CampaignReport:
     cells = backend.cells_from_args(args)
     store_path = args.store or backend.default_store
     shard = int(args.shard) if str(args.shard).isdigit() else args.shard
+    calibration = None
+    if args.calibration:
+        from repro.calib import Calibration
+        calibration = Calibration.load(args.calibration)
+        print(f"calibration: {args.calibration} "
+              f"({len(calibration.parts())} part(s), "
+              f"fingerprint {calibration.fingerprint()})")
     report = run_campaign(cells, store_path,
                           base_seed=args.seed, population=args.population,
                           iterations=args.iterations, weights=weights,
@@ -146,7 +159,8 @@ def main(argv: list[str] | None = None) -> CampaignReport:
                           verbose=args.verbose, searcher=args.searcher,
                           searcher_config=parse_searcher_config(
                               args.searcher_config), shard=shard,
-                          jax_screen=args.jax_screen)
+                          jax_screen=args.jax_screen,
+                          calibration=calibration)
     front = print_report(report, weights, args.top)
 
     if args.frontier_json:

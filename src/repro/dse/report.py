@@ -499,6 +499,50 @@ def render_placement(result, *, title: str | None = None) -> str:
     return "\n".join(lines).rstrip() + "\n"
 
 
+def calibration_section(calibration, stamped: int = 0,
+                        stamp_fps: set[str] | None = None) -> list[str]:
+    """The predicted-vs-measured error table for a fitted calibration
+    (:mod:`repro.calib`): per corrected part, the fitted compute/bandwidth
+    multipliers, measurement count, raw vs calibrated geometric-RMS error,
+    and provenance — the error bars behind every corrected frontier claim.
+    ``stamped``/``stamp_fps`` describe the store's per-record calibration
+    stamps, so the section also says how many records actually carried
+    corrections (and flags stamps from a DIFFERENT fit)."""
+    from repro.calib.fit import error_rows
+    lines = ["## Calibration (predicted vs measured)", ""]
+    if calibration.is_identity():
+        lines += ["_Identity calibration: no corrections applied; every "
+                  "evaluation used datasheet specs._", ""]
+        return lines
+    fp = calibration.fingerprint()
+    lines += [f"{len(calibration.parts())} corrected part(s), calibration "
+              f"fingerprint `{fp}`. `compute ×` / `bandwidth ×` multiply "
+              f"the part's delivered rate; errors are geometric-RMS "
+              f"relative error of the model against the fitted "
+              f"measurements, before (`raw`) and after (`cal`) the "
+              f"correction — the fit guarantees cal ≤ raw per part.", ""]
+    rows = []
+    for r in error_rows(calibration):
+        src = r["source"] + (f" ({r['date']})" if r["date"] else "")
+        rows.append([f"`{r['part']}`", r["compute_scale"], r["bw_scale"],
+                     r["n"], f"{r['raw_err_pct']:.2f}",
+                     f"{r['cal_err_pct']:.2f}", r["kind"], src])
+    lines += _table(["part", "compute ×", "bandwidth ×", "n", "raw err %",
+                     "cal err %", "kind", "source (date)"], rows)
+    lines += [""]
+    if stamped:
+        fps = sorted(f for f in (stamp_fps or set()) if f)
+        note = (f"{stamped} store record(s) were evaluated under "
+                f"calibration stamp(s) "
+                + ", ".join(f"`{f}`" for f in fps) + ".")
+        if any(f != fp for f in fps):
+            note += (" ⚠ Some stamps differ from the calibration shown "
+                     "above — those records were corrected by a different "
+                     "fit.")
+        lines += [note, ""]
+    return lines
+
+
 def _bench_section(bench: Mapping) -> list[str]:
     lines = ["## Benchmark appendix (`benchmarks/run.py --json`)", ""]
     for name in sorted(bench.get("benchmarks", {})):
@@ -646,7 +690,8 @@ def health_section(records: Sequence[Mapping],
 def render_report(records: Iterable[Mapping], *,
                   title: str = "DSE campaign report",
                   bench: Mapping | None = None, k: int = 12,
-                  events: Sequence[Mapping] | None = None) -> str:
+                  events: Sequence[Mapping] | None = None,
+                  calibration=None) -> str:
     """Records (any mix of backends) -> a Markdown report string.
 
     ``records`` may be any iterable — typically a streaming
@@ -662,11 +707,17 @@ def render_report(records: Iterable[Mapping], *,
     ``<store>.events.jsonl``) adds the campaign-health section; records
     with a ``trace`` field add convergence diagnostics even without
     events.
+
+    ``calibration`` (a :class:`repro.calib.Calibration`) appends the
+    predicted-vs-measured error table (:func:`calibration_section`), so
+    the report's frontier claims carry the model's measured error bars;
+    per-record calibration stamps are counted either way.
     """
     accs: dict[str, _BackendAcc] = {}
     norm = _NormAcc()
     traced: list[Mapping] = []
     total = 0
+    stamped, stamp_fps = 0, set()
     for r in records:
         total += 1
         name = record_backend(r)
@@ -677,6 +728,10 @@ def render_report(records: Iterable[Mapping], *,
         norm.add_record(r)
         if isinstance(r.get("trace"), Mapping):
             traced.append(r)
+        info = r.get("calibration")
+        if isinstance(info, Mapping):
+            stamped += 1
+            stamp_fps.add(str(info.get("fingerprint", "")))
 
     lines = [f"# {title}", "",
              f"{total} campaign cells across "
@@ -691,6 +746,15 @@ def render_report(records: Iterable[Mapping], *,
         lines += acc.section(k)
     if len([n for n in accs if accs[n].known]) > 1:
         lines += norm.section(k)
+    if calibration is not None:
+        lines += calibration_section(calibration, stamped, stamp_fps)
+    elif stamped:
+        fps = sorted(f for f in stamp_fps if f)
+        lines += ["## Calibration (predicted vs measured)", "",
+                  f"{stamped} record(s) carry calibration stamp(s) "
+                  + ", ".join(f"`{f}`" for f in fps)
+                  + " but no calibration file was supplied — rerun with "
+                    "`--calibration <file>` to render the error table.", ""]
     if events or traced:
         lines += health_section(traced, events, k=min(k, 10) if k > 0
                                 else 10, total=total)
@@ -880,6 +944,10 @@ def main(argv: list[str] | None = None) -> int:
                          "cross-backend frontier")
     ap.add_argument("--bench", default=None, metavar="JSON",
                     help="benchmarks/run.py --json output to append")
+    ap.add_argument("--calibration", default=None, metavar="JSON",
+                    help="fitted calibration (python -m repro.calib fit) — "
+                         "appends the predicted-vs-measured error table "
+                         "so frontier claims carry error bars")
     ap.add_argument("--out", default=None, metavar="MD",
                     help="output path (default: docs/reports/<store-stem>.md)")
     ap.add_argument("--title", default=None)
@@ -908,13 +976,31 @@ def main(argv: list[str] | None = None) -> int:
             if must not in md:
                 raise SystemExit(f"selftest: section {must!r} missing "
                                  f"from rendered report")
+        if "Calibration" in md:
+            raise SystemExit("selftest: uncalibrated fixture report must "
+                             "not contain a Calibration section")
         for must in ("Per-workload winner deltas", "Objective trajectories",
                      "Cross-backend frontier"):
             if must not in cmp_md:
                 raise SystemExit(f"selftest: section {must!r} missing "
                                  f"from compare report")
-        print(f"selftest OK: rendered {len(md)} + {len(cmp_md)} chars, "
-              f"all sections present")
+        from repro.calib import fit_corrections, fixture_measurements
+        cal = fit_corrections(fixture_measurements())
+        cal_md = render_report(fix, title="selftest calibrated campaign",
+                               k=args.top, calibration=cal)
+        if "## Calibration (predicted vs measured)" not in cal_md:
+            raise SystemExit("selftest: calibration error table missing "
+                             "from calibrated report")
+        for part in cal.parts():
+            c = cal.correction(part)
+            if f"`{part}`" not in cal_md:
+                raise SystemExit(f"selftest: part {part!r} missing from "
+                                 f"calibration error table")
+            if c.cal_err_pct > c.raw_err_pct + 1e-9:
+                raise SystemExit(f"selftest: calibrated error exceeds raw "
+                                 f"for {part!r}")
+        print(f"selftest OK: rendered {len(md)} + {len(cmp_md)} + "
+              f"{len(cal_md)} chars, all sections present")
         return 0
 
     if args.compare:
@@ -954,13 +1040,17 @@ def main(argv: list[str] | None = None) -> int:
     if args.bench:
         with open(args.bench) as f:
             bench = json.load(f)
+    calibration = None
+    if args.calibration:
+        from repro.calib import Calibration
+        calibration = Calibration.load(args.calibration)
     # merged telemetry from a --trace run rides next to the store; pick
     # it up automatically so traced campaigns get the health section
     ev_path = events_path_for(args.store)
     events = load_events(ev_path) if ev_path.exists() else None
     title = args.title or f"DSE campaign report — {Path(args.store).name}"
     md = render_report(store.iter_records(), title=title, bench=bench,
-                       k=args.top, events=events)
+                       k=args.top, events=events, calibration=calibration)
     out = Path(args.out) if args.out else \
         DEFAULT_REPORT_DIR / f"{Path(args.store).stem}.md"
     out.parent.mkdir(parents=True, exist_ok=True)

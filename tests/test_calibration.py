@@ -1,0 +1,354 @@
+"""Tests for :mod:`repro.calib` — the model-vs-measured calibration loop.
+
+Three layers of guarantees:
+
+* **Unit**: the geomean fit recovers known skews exactly, merges
+  provenance, guarantees calibrated error <= raw error per part, and
+  round-trips through JSON with fingerprint stability.
+* **Byte-identity** (the PR's acceptance lock): with no calibration —
+  or the explicit ``IDENTITY`` — every backend evaluation and the
+  rendered fixture report are byte-identical to the pre-calibration
+  goldens committed in ``tests/data/``.
+* **End-to-end round trip**: a tiny campaign evaluated against
+  synthetic measurements with a known skew; the fit shrinks the error
+  table, the calibration fingerprint keys the store's resume match so
+  calibrated and uncalibrated results never mix, and the per-record
+  provenance stamp survives a store reopen.
+"""
+import json
+import math
+import random
+from pathlib import Path
+
+import pytest
+
+from repro.calib import (IDENTITY, Calibration, Correction, Measurement,
+                         Provenance, error_rows, fit_corrections,
+                         fixture_measurements, published_measurements,
+                         validate_calibration)
+from repro.core.hw_specs import KU115, TPU_V5E
+
+REPO = Path(__file__).resolve().parent.parent
+
+_PROV = Provenance(source="test", date="2026-08-01", kind="synthetic")
+
+
+def _meas(part, axis, pred, meas, workload="w"):
+    return Measurement(part=part, axis=axis, workload=workload,
+                       predicted_s=pred, measured_s=meas, provenance=_PROV)
+
+
+# ---------------------------------------------------------------------------
+# unit: fit math
+# ---------------------------------------------------------------------------
+
+
+def test_fit_recovers_exact_skew():
+    # hardware delivers 80% of datasheet compute -> measured = pred / 0.8
+    ms = [_meas("tpu_v5e", "compute", p, p / 0.8) for p in (0.1, 1.0, 7.5)]
+    cal = fit_corrections(ms)
+    c = cal.correction("tpu_v5e")
+    assert c.compute_scale == pytest.approx(0.8, rel=1e-12)
+    assert c.bw_scale == 1.0 and c.n_bandwidth == 0
+    assert c.cal_err_pct == pytest.approx(0.0, abs=1e-9)
+    assert c.raw_err_pct == pytest.approx(25.0, rel=1e-9)  # 1/0.8 - 1
+
+
+def test_fit_is_geomean_of_ratios():
+    ms = [_meas("ku115", "compute", 1.0, 2.0),
+          _meas("ku115", "compute", 1.0, 0.5)]
+    cal = fit_corrections(ms)
+    # geomean(1/2, 1/0.5) = 1 -> identity on that axis
+    assert cal.correction("ku115").compute_scale == pytest.approx(1.0)
+
+
+def test_fit_handles_both_axes_independently():
+    ms = [_meas("h100", "compute", 1.0, 2.0),
+          _meas("h100", "bandwidth", 1.0, 1.25)]
+    c = fit_corrections(ms).correction("h100")
+    assert c.compute_scale == pytest.approx(0.5)
+    assert c.bw_scale == pytest.approx(0.8)
+    assert (c.n_compute, c.n_bandwidth) == (1, 1)
+
+
+def test_fit_merges_provenance():
+    p1 = Provenance("src-a", "2026-01-01", "microbench")
+    p2 = Provenance("src-b", "2026-03-01", "published")
+    ms = [Measurement("ku115", "compute", "w1", 1.0, 2.0, p1),
+          Measurement("ku115", "compute", "w2", 1.0, 2.0, p2)]
+    prov = fit_corrections(ms).correction("ku115").provenance
+    assert "src-a" in prov.source and "src-b" in prov.source
+    assert prov.date == "2026-03-01"          # newest measurement wins
+    assert prov.kind == "microbench+published"  # sorted, joined
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_property_cal_err_never_exceeds_raw_err(seed):
+    """The geomean minimizes RMS log error, so the calibrated error can
+    never exceed the raw error — on any noisy measurement set."""
+    rng = random.Random(seed)
+    ms = []
+    for part in ("ku115", "tpu_v5e", "h100"):
+        skew = rng.uniform(0.3, 3.0)
+        for i in range(rng.randint(1, 6)):
+            p = rng.uniform(0.01, 10.0)
+            noise = math.exp(rng.gauss(0.0, 0.2))
+            axis = rng.choice(("compute", "bandwidth"))
+            ms.append(_meas(part, axis, p, p / skew * noise, f"w{i}"))
+    cal = fit_corrections(ms)
+    for row in error_rows(cal):
+        assert row["cal_err_pct"] <= row["raw_err_pct"] + 1e-9, \
+            f"seed={seed} part={row['part']}"
+    assert validate_calibration(cal, ms) == []
+
+
+def test_fixture_fit_error_table_improves_every_row():
+    cal = fit_corrections(fixture_measurements())
+    rows = error_rows(cal)
+    assert len(rows) == len(cal.parts()) > 0
+    for row in rows:
+        assert row["cal_err_pct"] <= row["raw_err_pct"] + 1e-9
+        assert row["kind"] and row["source"] and row["date"]
+
+
+def test_published_table_fits_delivered_fractions():
+    cal = fit_corrections(published_measurements())
+    # MLPerf-style delivered fractions land well below datasheet peaks
+    for part in cal.parts():
+        assert 0.3 <= cal.correction(part).compute_scale <= 0.9
+
+
+def test_measurement_validates_inputs():
+    with pytest.raises(ValueError):
+        _meas("x", "latency", 1.0, 1.0)
+    with pytest.raises(ValueError):
+        _meas("x", "compute", 0.0, 1.0)
+    with pytest.raises(ValueError):
+        _meas("x", "compute", 1.0, -2.0)
+
+
+# ---------------------------------------------------------------------------
+# unit: Calibration container
+# ---------------------------------------------------------------------------
+
+
+def test_identity_filtering_and_fingerprint():
+    assert IDENTITY.is_identity()
+    assert Calibration({"ku115": Correction()}).is_identity()
+    # fingerprint of the empty fit is a stable golden (sha256 of "{}")
+    assert IDENTITY.fingerprint() == "44136fa355b3"
+    cal = fit_corrections(fixture_measurements())
+    assert not cal.is_identity()
+    assert cal.fingerprint() != IDENTITY.fingerprint()
+
+
+def test_for_spec_identity_returns_same_object():
+    assert IDENTITY.for_spec(KU115) is KU115
+    assert IDENTITY.for_spec(TPU_V5E) is TPU_V5E
+    cal = Calibration({"h100": Correction(compute_scale=0.5)})
+    assert cal.for_spec(KU115) is KU115  # uncorrected part untouched
+
+
+def test_for_spec_scales_the_right_family_fields():
+    cal = Calibration({
+        "ku115": Correction(compute_scale=0.9, bw_scale=0.8),
+        "tpu_v5e": Correction(compute_scale=0.75, bw_scale=0.85)})
+    f = cal.for_spec(KU115)
+    assert f.freq_mhz == pytest.approx(KU115.freq_mhz * 0.9)
+    assert f.bw_gbps == pytest.approx(KU115.bw_gbps * 0.8)
+    assert f.dsp == KU115.dsp  # resources are physical, never scaled
+    t = cal.for_spec(TPU_V5E)
+    assert t.peak_flops == pytest.approx(TPU_V5E.peak_flops * 0.75)
+    assert t.hbm_bw == pytest.approx(TPU_V5E.hbm_bw * 0.85)
+    assert t.hbm_bytes == TPU_V5E.hbm_bytes
+
+
+def test_save_load_round_trip_preserves_everything(tmp_path):
+    cal = fit_corrections(fixture_measurements())
+    path = cal.save(tmp_path / "cal.json")
+    back = Calibration.load(path)
+    assert back == cal
+    assert back.fingerprint() == cal.fingerprint()
+    for part in cal.parts():
+        assert back.correction(part).provenance == \
+            cal.correction(part).provenance
+
+
+def test_record_info_identity_none_else_stamped():
+    assert IDENTITY.record_info("ku115") is None
+    cal = fit_corrections(fixture_measurements())
+    assert cal.record_info("no-such-part") is None
+    info = cal.record_info("tpu_v5e")
+    assert info["fingerprint"] == cal.fingerprint()
+    assert info["part"] == "tpu_v5e"
+    assert info["provenance"]["date"]
+
+
+def test_validate_flags_bad_calibrations():
+    bad = Calibration({"ku115": Correction(compute_scale=100.0,
+                                           provenance=_PROV)})
+    assert any("plausible" in p or "scale" in p
+               for p in validate_calibration(bad))
+    worse = Calibration({"ku115": Correction(
+        compute_scale=0.9, provenance=_PROV,
+        raw_err_pct=1.0, cal_err_pct=5.0)})
+    assert validate_calibration(worse) != []
+    no_prov = Calibration({"ku115": Correction(compute_scale=0.9)})
+    assert validate_calibration(no_prov) != []
+
+
+# ---------------------------------------------------------------------------
+# byte-identity against the pre-calibration goldens
+# ---------------------------------------------------------------------------
+
+
+def _fresh_records(calibration):
+    from repro.dse.backends import BACKENDS, CUDACell, TPUCell
+    from repro.dse.campaign import CampaignCell, run_cell
+    kw = {} if calibration is None else {"calibration": calibration}
+    out = {
+        "fpga": run_cell(CampaignCell("vgg16", 64, 64, "zc706", 16, 1),
+                         0, 6, 4, **kw),
+        "tpu": BACKENDS["tpu"].run_cell(
+            TPUCell("xlstm-350m", "train_4k", 8, "full", 1), **kw),
+        "cuda": BACKENDS["cuda"].run_cell(
+            CUDACell("xlstm-350m", "train_4k", "a100-80g", 8, "full", 1),
+            **kw),
+    }
+    for rec in out.values():
+        rec.pop("search_time_s", None)
+    return out
+
+
+@pytest.mark.parametrize("calibration", [None, IDENTITY],
+                         ids=["none", "identity"])
+def test_uncalibrated_backends_byte_identical_to_golden(calibration):
+    golden = json.loads((REPO / "tests/data/golden_uncalibrated.json")
+                        .read_text())
+    fresh = _fresh_records(calibration)
+    for backend in golden:
+        assert json.dumps(fresh[backend], sort_keys=True) == \
+            json.dumps(golden[backend], sort_keys=True), backend
+
+
+def test_uncalibrated_fixture_report_byte_identical_to_golden():
+    from repro.dse.report import (fixture_events, fixture_records,
+                                  render_report)
+    md = render_report(fixture_records(), title="golden fixture report",
+                       events=fixture_events())
+    assert md == (REPO / "tests/data/golden_fixture_report.md").read_text()
+    assert "Calibration" not in md
+
+
+# ---------------------------------------------------------------------------
+# report + committed example
+# ---------------------------------------------------------------------------
+
+
+def test_report_renders_error_table_with_provenance():
+    from repro.dse.report import fixture_records, render_report
+    cal = fit_corrections(fixture_measurements())
+    md = render_report(fixture_records(), title="calibrated fixture",
+                       calibration=cal)
+    assert "## Calibration (predicted vs measured)" in md
+    assert cal.fingerprint() in md
+    for part in cal.parts():
+        assert f"`{part}`" in md
+    assert "raw err %" in md and "cal err %" in md
+
+
+def test_committed_example_calibration_doc_is_current():
+    from repro.calib.__main__ import example_markdown
+    committed = (REPO / "docs/reports/example_calibration.md").read_text()
+    assert example_markdown() == committed, \
+        "regenerate with: python -m repro.calib example --out " \
+        "docs/reports/example_calibration.md"
+
+
+def test_calib_cli_fit_show_validate(tmp_path, capsys):
+    from repro.calib.__main__ import main
+    out = str(tmp_path / "cal.json")
+    assert main(["fit", "--fixture", "--out", out]) == 0
+    assert main(["show", out]) == 0
+    assert main(["validate", out, "--fixture"]) == 0
+    text = capsys.readouterr().out
+    assert "fingerprint" in text and "raw err %" in text
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: seeded campaign round trip (the tentpole's closing loop)
+# ---------------------------------------------------------------------------
+
+
+def _skewed_tpu_measurements(seed=7, compute_skew=0.8, bw_skew=0.9):
+    """Synthetic measured numbers for tpu_v5e with a known skew: the
+    'hardware' delivers ``skew`` of datasheet, plus small seeded noise."""
+    rng = random.Random(seed)
+    ms = []
+    for i in range(5):
+        p = rng.uniform(0.05, 2.0)
+        noise = math.exp(rng.gauss(0.0, 0.03))
+        ms.append(_meas("tpu_v5e", "compute", p, p / compute_skew * noise,
+                        workload=f"synthetic/{i}"))
+    for i in range(3):
+        p = rng.uniform(0.05, 2.0)
+        noise = math.exp(rng.gauss(0.0, 0.03))
+        ms.append(_meas("tpu_v5e", "bandwidth", p, p / bw_skew * noise,
+                        workload=f"synthetic/bw{i}"))
+    return ms
+
+
+def test_e2e_fit_shrinks_error_and_scales_predictions():
+    ms = _skewed_tpu_measurements()
+    cal = fit_corrections(ms)
+    c = cal.correction("tpu_v5e")
+    assert c.compute_scale == pytest.approx(0.8, rel=0.05)
+    assert c.bw_scale == pytest.approx(0.9, rel=0.05)
+    (row,) = error_rows(cal)
+    assert row["cal_err_pct"] < row["raw_err_pct"]
+    assert row["cal_err_pct"] < 5.0 < row["raw_err_pct"]
+    # applying the correction slows the modeled step time: delivered
+    # compute dropped to ~80% of the datasheet the raw model assumed
+    from repro.dse.backends import BACKENDS, TPUCell
+    cell = TPUCell("xlstm-350m", "train_4k", 8, "full", 1)
+    raw = BACKENDS["tpu"].run_cell(cell)
+    corrected = BACKENDS["tpu"].run_cell(cell, calibration=cal)
+    assert corrected["objectives"]["step_time_s"] > \
+        raw["objectives"]["step_time_s"]
+    assert corrected["calibration"]["fingerprint"] == cal.fingerprint()
+    assert "calibration" not in raw
+
+
+def test_e2e_store_round_trip_provenance_and_resume(tmp_path):
+    from repro.dse import run_campaign
+    from repro.dse.backends import get_backend
+    from repro.dse.store import open_store
+
+    cal = fit_corrections(_skewed_tpu_measurements())
+    cells = get_backend("tpu").expand_cells(
+        archs=["xlstm-350m"], shapes=["train_4k"], chips=[8],
+        remats=("full",), microbatches=(1,))
+    store = str(tmp_path / "calibrated.jsonl")
+
+    first = run_campaign(cells, store, backend="tpu", calibration=cal)
+    assert first.new_cells == 1
+
+    # provenance stamp survives the store reopen
+    (rec,) = list(open_store(store).iter_records())
+    stamp = rec["calibration"]
+    assert stamp["fingerprint"] == cal.fingerprint()
+    assert stamp["compute_scale"] == \
+        pytest.approx(cal.correction("tpu_v5e").compute_scale)
+    assert stamp["provenance"]["kind"] == "synthetic"
+    assert rec["search"]["calibration"] == cal.fingerprint()
+
+    # same calibration -> memoized resume, nothing re-evaluated
+    again = run_campaign(cells, store, backend="tpu", calibration=cal)
+    assert again.reused_cells == 1 and again.new_evaluations == 0
+
+    # dropping (or changing) the calibration invalidates the resume
+    # match: uncalibrated results never silently mix with corrected ones
+    uncal = run_campaign(cells, store, backend="tpu")
+    assert uncal.new_cells == 1 and uncal.new_evaluations > 0
+    (rec2,) = list(open_store(store).iter_records())
+    assert "calibration" not in rec2

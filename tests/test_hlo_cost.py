@@ -1,0 +1,262 @@
+"""Fixture + property tests for the :mod:`repro.launch.hlo_cost` parser.
+
+The fixtures are committed HLO *text* (no jax compile needed), covering
+both print versions the parser must survive — older XLA's bare ``%name``
+operand references and newer XLA's inlined-shape operands — plus the
+accounting rules that distinguish this parser from XLA's own
+``cost_analysis()``: while bodies multiplied by ``known_trip_count``,
+descent into fusion computations, and collective traffic (``-start``
+result tuples halved, ``-done`` not double-counted).
+
+The randomized sweeps use seeded stdlib/numpy generation (same idiom as
+``test_pareto_properties.py``) so every counterexample replays from the
+seed in the assertion message.
+"""
+import random
+
+import pytest
+
+from repro.launch.hlo_cost import exact_cost
+
+SEEDS = range(10)
+
+
+# ---------------------------------------------------------------------------
+# fixture builders: the same graph in both HLO print versions
+# ---------------------------------------------------------------------------
+
+
+def _dot_entry(m: int, k: int, n: int, typed: bool) -> str:
+    """A single-dot ENTRY; ``typed`` selects the newer print version that
+    inlines each operand's shape (dims/layouts contain commas)."""
+    lhs = f"f32[{m},{k}]{{1,0}} %a" if typed else "%a"
+    rhs = f"f32[{k},{n}]{{1,0}} %b" if typed else "%b"
+    return f"""\
+ENTRY %main.1 (a: f32[{m},{k}], b: f32[{k},{n}]) -> f32[{m},{n}] {{
+  %a = f32[{m},{k}]{{1,0}} parameter(0)
+  %b = f32[{k},{n}]{{1,0}} parameter(1)
+  ROOT %dot.1 = f32[{m},{n}]{{1,0}} dot({lhs}, {rhs}), \
+lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}
+}}
+"""
+
+
+def _while_module(d: int, trip: int, escaped: bool, typed: bool) -> str:
+    """A while loop whose body is one ``d x d`` dot, with the trip count
+    in the backend config — plain or JSON-escaped, as both appear in
+    real ``as_text()`` output depending on XLA version."""
+    if escaped:
+        bc = ('backend_config="{\\"known_trip_count\\":'
+              f'{{\\"n\\":\\"{trip}\\"}}}}"')
+    else:
+        bc = f'backend_config={{"known_trip_count":{{"n":"{trip}"}}}}'
+    p = f"f32[{d},{d}]{{1,0}} %p.1" if typed else "%p.1"
+    arg = f"f32[{d},{d}]{{1,0}} %arg.0" if typed else "%arg.0"
+    return f"""\
+HloModule while_test
+
+%body (p.1: f32[{d},{d}]) -> f32[{d},{d}] {{
+  %p.1 = f32[{d},{d}]{{1,0}} parameter(0)
+  ROOT %dot.2 = f32[{d},{d}]{{1,0}} dot({p}, {p}), \
+lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}
+}}
+
+%cond (p.2: f32[{d},{d}]) -> pred[] {{
+  %p.2 = f32[{d},{d}]{{1,0}} parameter(0)
+  ROOT %lt.1 = pred[] constant(true)
+}}
+
+ENTRY %main.9 (arg.0: f32[{d},{d}]) -> f32[{d},{d}] {{
+  %arg.0 = f32[{d},{d}]{{1,0}} parameter(0)
+  ROOT %while.1 = f32[{d},{d}]{{1,0}} while({arg}), condition=%cond, \
+body=%body, {bc}
+}}
+"""
+
+
+_FUSION_MODULE = """\
+HloModule fusion_test
+
+%fused_computation (param_0: f32[32,16], param_1: f32[16,8]) -> f32[32,8] {
+  %param_0 = f32[32,16]{1,0} parameter(0)
+  %param_1 = f32[16,8]{1,0} parameter(1)
+  ROOT %dot.3 = f32[32,8]{1,0} dot(%param_0, %param_1), \
+lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+ENTRY %main.5 (a: f32[32,16], b: f32[16,8]) -> f32[32,8] {
+  %a = f32[32,16]{1,0} parameter(0)
+  %b = f32[16,8]{1,0} parameter(1)
+  ROOT %fusion.1 = f32[32,8]{1,0} fusion(%a, %b), kind=kLoop, \
+calls=%fused_computation
+}
+"""
+
+
+_COLLECTIVE_MODULE = """\
+HloModule collective_test
+
+%add (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %add.1 = f32[] add(%x, %y)
+}
+
+ENTRY %main.7 (a: f32[1024]) -> f32[4096] {
+  %a = f32[1024]{0} parameter(0)
+  %ar.1 = f32[1024]{0} all-reduce(%a), replica_groups={}, to_apply=%add
+  %ags.1 = (f32[1024]{0}, f32[4096]{0}) all-gather-start(%ar.1), dimensions={0}
+  ROOT %agd.1 = f32[4096]{0} all-gather-done(%ags.1)
+}
+"""
+
+
+# ---------------------------------------------------------------------------
+# fixtures: print versions
+# ---------------------------------------------------------------------------
+
+
+def test_both_print_versions_count_identical_flops():
+    want = 2 * 128 * 32 * 64
+    bare = exact_cost(_dot_entry(128, 64, 32, typed=False))
+    inlined = exact_cost(_dot_entry(128, 64, 32, typed=True))
+    assert bare.flops == pytest.approx(want, rel=1e-9)
+    assert inlined.flops == pytest.approx(want, rel=1e-9)
+    assert bare.mem_bytes == inlined.mem_bytes > 0
+
+
+def test_inlined_shape_operands_survive_top_level_comma_split():
+    """The typed print puts commas inside operand shapes; a naive
+    ``split(",")`` would tear ``f32[128,64]{1,0} %a`` apart and lose the
+    contraction dim. mem accounting must also resolve both operand
+    styles to the same byte counts."""
+    ec = exact_cost(_dot_entry(128, 64, 32, typed=True))
+    # dot: result + both operand tensors, all f32
+    want_mem = 4 * (128 * 32 + 128 * 64 + 64 * 32)
+    assert ec.mem_bytes == want_mem
+
+
+# ---------------------------------------------------------------------------
+# fixtures: while trip counts
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("escaped", [False, True])
+@pytest.mark.parametrize("typed", [False, True])
+def test_while_body_multiplied_by_trip_count(escaped, typed):
+    ec = exact_cost(_while_module(64, trip=9, escaped=escaped, typed=typed))
+    assert ec.flops == pytest.approx(9 * 2 * 64 ** 3, rel=1e-9)
+
+
+def test_while_without_trip_config_counts_body_once():
+    text = _while_module(32, trip=5, escaped=False, typed=False)
+    text = text.replace(
+        ', backend_config={"known_trip_count":{"n":"5"}}', "")
+    ec = exact_cost(text)
+    assert ec.flops == pytest.approx(2 * 32 ** 3, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# fixtures: fusion descent
+# ---------------------------------------------------------------------------
+
+
+def test_fusion_body_flops_counted_through_calls():
+    ec = exact_cost(_FUSION_MODULE)
+    assert ec.flops == pytest.approx(2 * 32 * 8 * 16, rel=1e-9)
+
+
+def test_fusion_body_memory_stays_in_vmem():
+    """HBM traffic is accounted at fusion granularity: the ENTRY's fusion
+    op contributes its result + operand bytes; the body's internal ops
+    stream through VMEM and must contribute nothing."""
+    ec = exact_cost(_FUSION_MODULE)
+    want = 4 * (32 * 8 + 32 * 16 + 16 * 8)  # fusion result + two operands
+    assert ec.mem_bytes == want
+
+
+def test_branch_computations_descend_once_each():
+    text = """\
+%branch_a (pa: f32[16,16]) -> f32[16,16] {
+  %pa = f32[16,16]{1,0} parameter(0)
+  ROOT %dot.a = f32[16,16]{1,0} dot(%pa, %pa), \
+lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+%branch_b (pb: f32[16,16]) -> f32[16,16] {
+  %pb = f32[16,16]{1,0} parameter(0)
+  ROOT %dot.b = f32[16,16]{1,0} dot(%pb, %pb), \
+lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+ENTRY %main.3 (i: s32[], x: f32[16,16]) -> f32[16,16] {
+  %i = s32[] parameter(0)
+  %x = f32[16,16]{1,0} parameter(1)
+  ROOT %cond.1 = f32[16,16]{1,0} conditional(%i, %x, %x), \
+branch_computations={%branch_a, %branch_b}
+}
+"""
+    ec = exact_cost(text)
+    assert ec.flops == pytest.approx(2 * 2 * 16 ** 3, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# fixtures: collective traffic
+# ---------------------------------------------------------------------------
+
+
+def test_collective_traffic_start_halved_done_skipped():
+    ec = exact_cost(_COLLECTIVE_MODULE)
+    assert ec.coll_bytes["all-reduce"] == 1024 * 4
+    # -start result is the (operand, result) tuple -> halved
+    assert ec.coll_bytes["all-gather"] == (1024 + 4096) * 4 // 2
+    assert ec.coll_bytes["reduce-scatter"] == 0.0
+    assert ec.coll_total == 1024 * 4 + (1024 + 4096) * 4 // 2
+
+
+# ---------------------------------------------------------------------------
+# seeded property sweeps (stdlib random; no extra dependencies)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_property_dot_flops_match_analytic(seed):
+    rng = random.Random(seed)
+    m, k, n = (rng.randint(1, 96) for _ in range(3))
+    want = 2 * m * k * n
+    for typed in (False, True):
+        ec = exact_cost(_dot_entry(m, k, n, typed=typed))
+        assert ec.flops == pytest.approx(want, rel=1e-9), \
+            f"seed={seed} dims=({m},{k},{n}) typed={typed}"
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_property_trip_count_scales_linearly(seed):
+    rng = random.Random(1000 + seed)
+    d = rng.randint(2, 48)
+    trip = rng.randint(1, 40)
+    ec = exact_cost(_while_module(d, trip, escaped=bool(rng.getrandbits(1)),
+                                  typed=bool(rng.getrandbits(1))))
+    assert ec.flops == pytest.approx(trip * 2 * d ** 3, rel=1e-9), \
+        f"seed={seed} d={d} trip={trip}"
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_property_all_reduce_bytes_match_result_size(seed):
+    rng = random.Random(2000 + seed)
+    numel = rng.randint(1, 1 << 16)
+    text = f"""\
+%add (x: f32[], y: f32[]) -> f32[] {{
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %add.1 = f32[] add(%x, %y)
+}}
+
+ENTRY %main.2 (a: f32[{numel}]) -> f32[{numel}] {{
+  %a = f32[{numel}]{{0}} parameter(0)
+  ROOT %ar.1 = f32[{numel}]{{0}} all-reduce(%a), replica_groups={{}}, \
+to_apply=%add
+}}
+"""
+    ec = exact_cost(text)
+    assert ec.coll_bytes["all-reduce"] == numel * 4, f"seed={seed} n={numel}"

@@ -1,0 +1,143 @@
+"""Edge-case tests for :mod:`repro.core.hw_specs`: budget boundary
+semantics (``CostEnvelope``), cross-family costing (``pod_cost``),
+precision mapping (``alpha_for``), and the calibration scaling hook
+(``scaled_spec``)."""
+import dataclasses
+
+import pytest
+
+from repro.core.hw_specs import (A100_80G, FPGAS, GPUS, H100, KU115, TPU_V5E,
+                                 TPUS, ZC706, CostEnvelope, FPGASpec,
+                                 alpha_for, pod_cost, scaled_spec)
+
+
+# ---------------------------------------------------------------------------
+# CostEnvelope boundaries
+# ---------------------------------------------------------------------------
+
+
+def test_envelope_unbounded_admits_everything():
+    env = CostEnvelope()
+    assert env.admits(1e12, 1e12)
+    assert env.capped_axes() == ()
+    assert env.describe() == "unbounded"
+
+
+def test_envelope_admits_exactly_at_cap():
+    env = CostEnvelope(usd_per_hour=100.0, watts=5000.0)
+    assert env.admits(100.0, 5000.0)
+    assert env.admits(0.0, 0.0)
+
+
+def test_envelope_relative_epsilon_boundary():
+    """Float sums that land *at* budget (within the 1e-9 relative slack)
+    must not flap infeasible; anything past the slack must."""
+    cap = 100.0
+    env = CostEnvelope(usd_per_hour=cap)
+    assert env.admits(cap * (1 + 0.5e-9), 0.0)   # inside the slack
+    assert not env.admits(cap * (1 + 1e-8), 0.0)  # past it
+    env_w = CostEnvelope(watts=cap)
+    assert env_w.admits(0.0, cap * (1 + 0.5e-9))
+    assert not env_w.admits(0.0, cap * (1 + 1e-8))
+
+
+def test_envelope_each_axis_caps_independently():
+    env = CostEnvelope(usd_per_hour=10.0, watts=1000.0)
+    assert not env.admits(11.0, 1.0)
+    assert not env.admits(1.0, 1001.0)
+    only_watts = CostEnvelope(watts=1000.0)
+    assert only_watts.admits(1e9, 999.0)
+    assert only_watts.capped_axes() == ("watts",)
+
+
+def test_envelope_capped_axes_order_and_describe():
+    env = CostEnvelope(usd_per_hour=150.0, watts=40000.0)
+    assert env.capped_axes() == ("usd_per_hour", "watts")
+    assert env.describe() == "$150/h and 40000 W"
+    assert CostEnvelope(usd_per_hour=2.5).describe() == "$2.5/h"
+
+
+# ---------------------------------------------------------------------------
+# pod_cost across all three spec families
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", [KU115, ZC706, TPU_V5E, A100_80G, H100],
+                         ids=lambda s: s.name)
+def test_pod_cost_scales_linearly_per_family(spec):
+    w1, d1 = pod_cost(spec)
+    assert (w1, d1) == (spec.tdp_watts, spec.usd_per_hour)
+    w8, d8 = pod_cost(spec, 8)
+    assert w8 == pytest.approx(8 * w1) and d8 == pytest.approx(8 * d1)
+
+
+def test_every_registered_part_carries_cost_metadata():
+    for spec in list(FPGAS.values()) + list(TPUS.values()) + \
+            list(GPUS.values()):
+        w, d = pod_cost(spec, 2)
+        assert w > 0 and d > 0
+
+
+# ---------------------------------------------------------------------------
+# alpha_for precision mapping
+# ---------------------------------------------------------------------------
+
+
+def test_alpha_for_precision_boundaries():
+    assert alpha_for(16) == 2
+    assert alpha_for(8) == 4    # 8-bit packs two MACs per DSP
+    assert alpha_for(9) == 2    # strictly-above-8 falls back
+    assert alpha_for(4) == 4
+    assert alpha_for(32) == 2
+
+
+# ---------------------------------------------------------------------------
+# scaled_spec (the calibration hook)
+# ---------------------------------------------------------------------------
+
+
+def test_scaled_spec_identity_returns_same_object():
+    for spec in (KU115, TPU_V5E, H100):
+        assert scaled_spec(spec) is spec
+        assert scaled_spec(spec, 1.0, 1.0) is spec
+
+
+def test_scaled_spec_fpga_scales_clock_and_bandwidth_only():
+    s = scaled_spec(KU115, 0.9, 0.8)
+    assert s.freq_mhz == pytest.approx(KU115.freq_mhz * 0.9)
+    assert s.bw_gbps == pytest.approx(KU115.bw_gbps * 0.8)
+    assert (s.dsp, s.bram18k, s.usable_frac) == \
+        (KU115.dsp, KU115.bram18k, KU115.usable_frac)
+    assert KU115.freq_mhz == 200.0  # frozen source untouched
+
+
+def test_scaled_spec_tpu_gpu_scale_flops_and_hbm_bw_only():
+    t = scaled_spec(TPU_V5E, 0.75, 0.85)
+    assert t.peak_flops == pytest.approx(TPU_V5E.peak_flops * 0.75)
+    assert t.hbm_bw == pytest.approx(TPU_V5E.hbm_bw * 0.85)
+    assert (t.hbm_bytes, t.ici_bw) == (TPU_V5E.hbm_bytes, TPU_V5E.ici_bw)
+    g = scaled_spec(H100, 0.5)
+    assert g.peak_flops == pytest.approx(H100.peak_flops * 0.5)
+    assert (g.hbm_bw, g.nvlink_bw, g.sm_count) == \
+        (H100.hbm_bw, H100.nvlink_bw, H100.sm_count)
+
+
+def test_scaled_spec_rejects_unknown_families():
+    with pytest.raises(TypeError):
+        scaled_spec(object(), 0.9, 0.9)
+
+
+def test_scaled_spec_preserves_derived_fpga_properties():
+    s = scaled_spec(KU115, 0.5, 1.0)
+    assert s.freq == pytest.approx(KU115.freq * 0.5)
+    assert s.dsp_usable == KU115.dsp_usable
+    assert s.peak_gops() == pytest.approx(KU115.peak_gops() * 0.5)
+
+
+def test_fpga_usable_fractions_floor_to_int():
+    odd = FPGASpec("odd", dsp=999, bram18k=333, bw_gbps=10.0,
+                   usable_frac=0.85)
+    assert odd.dsp_usable == int(999 * 0.85)
+    assert odd.bram_usable == int(333 * 0.85)
+    assert odd.bram_bits == 333 * 18 * 1024
+    assert dataclasses.replace(odd, usable_frac=1.0).dsp_usable == 999

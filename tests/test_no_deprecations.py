@@ -1,0 +1,52 @@
+"""Guard: the tier-1 campaign -> store -> report path emits no
+DeprecationWarnings from repro code.
+
+``ResultStore.records()`` is deprecated in favor of the streaming
+``iter_records()``; every in-repo caller has been migrated (the one
+remaining ``.records()`` call lives in ``test_store_v2.py``, which
+asserts the warning *does* fire). This test keeps the main paths clean
+so the deprecation stays actionable instead of drowning in noise."""
+import warnings
+
+
+def _repro_deprecations(caught):
+    return [w for w in caught
+            if issubclass(w.category, DeprecationWarning)
+            and "repro" in (w.filename or "")]
+
+
+def test_campaign_store_report_path_is_deprecation_free(tmp_path):
+    from repro.dse import run_campaign
+    from repro.dse.backends import get_backend
+    from repro.dse.report import render_report
+    from repro.dse.store import open_store
+
+    cells = get_backend("tpu").expand_cells(
+        archs=["xlstm-350m"], shapes=["train_4k"], chips=[8, 16],
+        remats=("full",), microbatches=(1,))
+    store = str(tmp_path / "nd.jsonl")
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        rep = run_campaign(cells, store, backend="tpu")
+        rep.frontier()
+        rep.ranked(None)
+        s = open_store(store)
+        recs = list(s.iter_records())
+        md = render_report(recs, title="no-deprecation smoke")
+    assert len(recs) == 2 and "Pareto frontier" in md
+    assert _repro_deprecations(caught) == [], \
+        [str(w.message) for w in _repro_deprecations(caught)]
+
+
+def test_fixture_report_and_calibration_paths_are_deprecation_free():
+    from repro.calib import fit_corrections, fixture_measurements
+    from repro.dse.report import fixture_events, fixture_records, \
+        render_report
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        cal = fit_corrections(fixture_measurements())
+        render_report(fixture_records(), title="t", events=fixture_events(),
+                      calibration=cal)
+    assert _repro_deprecations(caught) == [], \
+        [str(w.message) for w in _repro_deprecations(caught)]
