@@ -265,6 +265,36 @@ def bench_fpga_campaign() -> list[dict]:
         "derived": (f"untraced_us={us_plain:.0f};"
                     f"overhead={us_tr / us_plain:.2f}x;"
                     f"events={n_events}")})
+
+    # fault-path overhead: the same cell evaluations through the
+    # resilience layer (execute_cell retry accounting + the UNARMED
+    # injection harness, i.e. the shipped configuration) vs a bare
+    # run_cell loop — gates the claim that an idle harness + retry
+    # bookkeeping costs ~nothing
+    from repro.dse.backends import run_cell_by_backend
+    from repro.dse.resilience import RetryPolicy, execute_cell
+
+    def attempt_fn(cell, attempt):
+        return run_cell_by_backend("fpga", cell, 0, 6, 4, None, None,
+                                   attempt=attempt)
+
+    def bare_loop():
+        return [run_cell_by_backend("fpga", c, 0, 6, 4, None, None)
+                for c in cells]
+
+    def resilient_loop():
+        policy = RetryPolicy()
+        return [execute_cell(c, attempt_fn, policy) for c in cells]
+
+    resilient_loop()                       # warm both paths identically
+    bare_loop()
+    _, us_res = _timed(resilient_loop)
+    _, us_bare = _timed(bare_loop)
+    rows.append({
+        "name": "campaign_fpga_faultpath", "us_per_call": us_res,
+        "derived": (f"bare_us={us_bare:.0f};"
+                    f"overhead={us_res / us_bare:.2f}x;"
+                    f"harness=inert")})
     return rows
 
 

@@ -99,7 +99,12 @@ _BACKEND_EXPORTS = ("BACKENDS", "Backend", "CUDABackend", "CUDACell",
 _REPORT_EXPORTS = ("fixture_events", "fixture_records", "health_section",
                    "render_compare", "render_placement", "render_report")
 _OBS_EXPORTS = ("events_for_store", "example_health_md")
-_STORE_EXPORTS = ("CampaignStore", "ResultStore", "open_store", "rav_hash")
+_STORE_EXPORTS = ("CampaignStore", "ResultStore", "is_ok", "open_store",
+                  "rav_hash", "record_status")
+_RESILIENCE_EXPORTS = ("CellOutcome", "CellTimeout", "CorruptRecord",
+                       "RetryPolicy", "WorkerCrash", "execute_cell",
+                       "interrupt_scope", "quarantine_record",
+                       "run_resilient_pool")
 _PLACEMENT_EXPORTS = ("Assignment", "BudgetInfeasibleError", "Candidate",
                       "CoverageError", "PlacementError", "PlacementResult",
                       "candidates_by_workload", "ensure_coverage",
@@ -108,7 +113,8 @@ _PLACEMENT_EXPORTS = ("Assignment", "BudgetInfeasibleError", "Candidate",
 
 __all__ = [
     *_CAMPAIGN_EXPORTS, *_BACKEND_EXPORTS, *_REPORT_EXPORTS,
-    *_PLACEMENT_EXPORTS, *_OBS_EXPORTS,
+    *_PLACEMENT_EXPORTS, *_OBS_EXPORTS, *_RESILIENCE_EXPORTS,
+    "is_ok", "record_status",
     "NORMALIZED_DEFAULT_WEIGHTS", "NORMALIZED_OBJECTIVES",
     "OBJECTIVES", "ObjectiveSpec", "Objectives", "canonical_vector",
     "normalized_throughput", "scalarize_values", "scalarized_objective",
@@ -138,4 +144,7 @@ def __getattr__(name: str):
     if name in _STORE_EXPORTS:
         from . import store
         return getattr(store, name)
+    if name in _RESILIENCE_EXPORTS:
+        from . import resilience
+        return getattr(resilience, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

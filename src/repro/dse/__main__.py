@@ -1,4 +1,4 @@
 """``python -m repro.dse`` == ``python -m repro.dse.campaign``."""
-from .cli import main
+from .cli import run
 
-main()
+raise SystemExit(run())

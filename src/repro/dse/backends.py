@@ -54,6 +54,7 @@ from __future__ import annotations
 import abc
 import argparse
 import dataclasses
+import os
 import time
 from typing import Mapping, Sequence
 
@@ -68,6 +69,10 @@ from .objectives import (DEFAULT_WEIGHTS, OBJECTIVES, ObjectiveSpec,
                          canonical_vector, normalized_throughput,
                          scalarize_values)
 from .store import SCHEMA_VERSION
+
+#: Kept as a local literal (matches :data:`repro.testing.faults.ENV_VAR`)
+#: so the disabled-harness hot path never imports repro.testing.
+_FAULTS_ENV = "REPRO_FAULTS"
 
 
 # ---------------------------------------------------------------------------
@@ -968,7 +973,8 @@ def run_cell_by_backend(backend_name: str, cell, base_seed: int,
                         obs: Mapping | None = None,
                         searcher: str = "pso",
                         searcher_config: Mapping | None = None,
-                        screen_fits=None, calibration=None) -> dict:
+                        screen_fits=None, calibration=None,
+                        attempt: int = 1, faults=None) -> dict:
     """Top-level (picklable) pool entry point: resolve the backend by name
     in the worker and evaluate one cell.
 
@@ -984,15 +990,31 @@ def run_cell_by_backend(backend_name: str, cell, base_seed: int,
     fitnesses (:func:`repro.dse.campaign.prescreen_cells_jax`) and is
     only ever non-None for the fpga backend — the exhaustive
     enumerators never see the keyword. ``calibration`` (picklable)
-    forwards the campaign's correction factors into the worker."""
+    forwards the campaign's correction factors into the worker.
+
+    ``attempt`` is the 1-based retry attempt the resilience layer is on
+    — workers are stateless across retries, so the attempt number rides
+    in. ``faults`` arms the deterministic fault-injection harness
+    (:mod:`repro.testing.faults`): a plan path/dict/FaultPlan, defaulting
+    to the ``REPRO_FAULTS`` env var (inherited by spawn workers). Unset
+    — the production case — the check is a single dict lookup and the
+    harness module is never imported."""
+    if faults is None:
+        faults = os.environ.get(_FAULTS_ENV)
+    plan = None
+    if faults:
+        from repro.testing.faults import load_plan
+        plan = load_plan(faults)
+        plan.fire_before(cell.key, attempt)
     be = get_backend(backend_name)
     kw = {} if screen_fits is None else {"screen_fits": screen_fits}
     if not obs:
-        return be.run_cell(cell, base_seed=base_seed, population=population,
-                           iterations=iterations, weights=weights,
-                           searcher=searcher,
-                           searcher_config=searcher_config,
-                           calibration=calibration, **kw)
+        rec = be.run_cell(cell, base_seed=base_seed, population=population,
+                          iterations=iterations, weights=weights,
+                          searcher=searcher,
+                          searcher_config=searcher_config,
+                          calibration=calibration, **kw)
+        return plan.mangle_after(cell.key, attempt, rec) if plan else rec
     from repro.obs import worker_tracer
     with worker_tracer(obs["events_dir"]) as tracer:
         tracer.span_at("queue.wait", obs["t_submit"],
@@ -1012,4 +1034,4 @@ def run_cell_by_backend(backend_name: str, cell, base_seed: int,
                                  cell=cell.key)
                     tracer.gauge(f"cache.{cache}.misses", st["misses"],
                                  cell=cell.key)
-    return rec
+    return plan.mangle_after(cell.key, attempt, rec) if plan else rec

@@ -28,7 +28,7 @@ import hashlib
 import json
 import multiprocessing
 import time
-from concurrent.futures import ProcessPoolExecutor, as_completed
+from concurrent.futures import ProcessPoolExecutor
 from pathlib import Path
 from typing import TYPE_CHECKING, Callable, Iterable, Mapping, Sequence
 
@@ -42,7 +42,10 @@ from repro.obs import (NULL, Tracer, chrome_path_for, chrome_trace,
 from .frontier import FrontierIndex
 from .objectives import Objectives, scalarized_objective
 from .pareto import select_diverse
-from .store import SCHEMA_VERSION, CampaignStore, open_store, rav_hash
+from .resilience import (RetryPolicy, execute_cell, interrupt_scope,
+                         run_resilient_pool)
+from .store import (SCHEMA_VERSION, CampaignStore, is_ok, open_store,
+                    rav_hash, record_status)
 
 if TYPE_CHECKING:  # pragma: no cover - circular-import-free type hints
     from .backends import Backend
@@ -243,7 +246,9 @@ def prescreen_cells_jax(cells: Sequence[CampaignCell], *,
 @dataclasses.dataclass
 class CampaignReport:
     cells: list                  # backend cells (CampaignCell, TPUCell, ...)
-    records: list[dict]          # one per cell, store order = cells order
+    records: list[dict]          # per cell in cell order; quarantined
+    #                              (status "failed") records included,
+    #                              cells interrupted before running absent
     reused_cells: int
     new_cells: int
     new_evaluations: int         # search evaluations actually run this time
@@ -251,6 +256,11 @@ class CampaignReport:
     backend: "Backend | None" = None   # None == fpga (PR-1 compatibility)
     events_path: Path | None = None    # merged events JSONL (traced runs)
     trace_path: Path | None = None     # Chrome trace export (traced runs)
+    failed_cells: int = 0        # quarantined records among `records`
+    retried_cells: int = 0       # cells that succeeded after >= 1 retry
+    missing_cells: int = 0       # requested cells with no record at all
+    pool_rebuilds: int = 0       # worker-pool replacements (crash/timeout)
+    interrupted: bool = False    # SIGINT/SIGTERM stopped the campaign
 
     def _backend(self) -> "Backend":
         if self.backend is None:
@@ -258,8 +268,21 @@ class CampaignReport:
             self.backend = get_backend("fpga")
         return self.backend
 
+    @property
+    def partial(self) -> bool:
+        """True when the campaign did NOT deliver every requested cell as
+        a normal result — interrupted, quarantined, or missing cells.
+        The CLI exits 3 on partial campaigns (with a resume hint)."""
+        return bool(self.interrupted or self.failed_cells
+                    or self.missing_cells)
+
+    def failures(self) -> list[dict]:
+        """The quarantined (``status: "failed"``) records, cell order."""
+        return [r for r in self.records if not is_ok(r)]
+
     def feasible(self) -> list[dict]:
-        return [r for r in self.records if r["objectives"]["feasible"]]
+        return [r for r in self.records
+                if is_ok(r) and r.get("objectives", {}).get("feasible")]
 
     def frontier_index(self) -> FrontierIndex:
         """The campaign's incremental Pareto archive: feasible records
@@ -321,6 +344,9 @@ def run_campaign(cells: Iterable,
                  shard: int | str = 0,
                  jax_screen: bool = False,
                  calibration=None,
+                 policy: RetryPolicy | None = None,
+                 retry_failed: bool = False,
+                 install_signal_handlers: bool = True,
                  ) -> CampaignReport:
     """Run (or resume) a campaign against a JSONL store.
 
@@ -373,6 +399,24 @@ def run_campaign(cells: Iterable,
     its fingerprint joins the stored search config, so calibrated and
     uncalibrated results never mix on resume. ``None`` (the default) and
     the identity calibration are byte-identical to pre-calibration runs.
+
+    Execution is fault-tolerant (:mod:`repro.dse.resilience`): ``policy``
+    (default :class:`~repro.dse.resilience.RetryPolicy` seeded from
+    ``base_seed``) retries transient per-cell failures with deterministic
+    backoff, enforces an optional per-cell wall-clock timeout on the pool
+    path, and survives worker crashes by rebuilding the pool and
+    resubmitting the lost in-flight cells. A cell that exhausts its
+    attempts is *quarantined* — stored as a ``status: "failed"`` record
+    carrying the exception and per-attempt history — instead of aborting
+    the campaign; quarantined cells resume as done until
+    ``retry_failed=True`` (CLI ``--retry-failed``) opts them back in.
+    SIGINT/SIGTERM (``install_signal_handlers``, main thread only) stop
+    submissions, drain/cancel in-flight cells, flush the store and
+    telemetry sidecars, and return a partial report
+    (:attr:`CampaignReport.interrupted`; the CLI exits 3 with a resume
+    hint). First-attempt successes are stored byte-identically to
+    pre-resilience campaigns; only retried records gain a ``resilience``
+    block.
     """
     from .backends import get_backend, run_cell_by_backend
     be = get_backend(backend)
@@ -403,12 +447,25 @@ def run_campaign(cells: Iterable,
                               calibration=calibration)
     # A stored cell counts as done only if it was searched with the same
     # settings; a config change re-runs (and overwrites) stale records.
-    todo = [c for c in cells
-            if (store.get(c.key) or {}).get("search") != search]
+    # Quarantined cells count as done too — a permanent failure must not
+    # be re-hit on every resume — unless retry_failed opts them back in.
+    policy = policy or RetryPolicy(seed=base_seed)
+    todo, quarantined_prior = [], 0
+    for c in cells:
+        prior = store.get(c.key)
+        if prior is None or prior.get("search") != search:
+            todo.append(c)
+        elif record_status(prior) != "ok":
+            if retry_failed:
+                todo.append(c)
+            else:
+                quarantined_prior += 1
     say = progress or (lambda _msg: None)
     say(f"campaign[{be.name}]: {len(cells)} cells, "
         f"{len(cells) - len(todo)} reused, "
-        f"{len(todo)} to run (workers={workers})")
+        f"{len(todo)} to run (workers={workers})"
+        + (f" — {quarantined_prior} quarantined cell(s) skipped; "
+           f"--retry-failed re-runs them" if quarantined_prior else ""))
     tracer.count("cells.reused", len(cells) - len(todo))
 
     screen_fits: dict = {}
@@ -436,15 +493,31 @@ def run_campaign(cells: Iterable,
 
     new_evals = 0
     done = 0
+    failed_now = 0
+    retried_now = 0
+    pool_rebuilds = 0
+    interrupted = False
 
-    def finish(cell, rec: dict) -> None:
-        nonlocal new_evals, done
-        with tracer.span("store.append", cell=cell.key):
-            store.put(rec)
-        new_evals += rec["evaluations"]
+    def finish(outcome) -> None:
+        """Store and narrate one CellOutcome (success or quarantine)."""
+        nonlocal new_evals, done, failed_now, retried_now
+        rec = outcome.record
+        if rec is None:           # interrupted mid-cell: nothing stored
+            return
         done += 1
-        tracer.count("cells.done")
+        with tracer.span("store.append", cell=outcome.cell.key):
+            store.put(rec)
         elapsed = time.perf_counter() - t0
+        if outcome.failed:
+            failed_now += 1
+            say(f"  [{done}/{len(todo)}] {outcome.cell.key}: FAILED — "
+                f"{rec['error_type']} after {rec['attempts']} attempt(s), "
+                f"quarantined | elapsed {elapsed:.1f}s")
+            return
+        if outcome.retried:
+            retried_now += 1
+        new_evals += rec["evaluations"]
+        tracer.count("cells.done")
         eta = elapsed / done * (len(todo) - done)
         extra = ""
         if verbose and rec.get("trace"):
@@ -452,50 +525,61 @@ def run_campaign(cells: Iterable,
             extra = (f" [{tr.get('stop_reason', '?')}"
                      f"@{tr.get('iterations', '?')}it"
                      f", {tr.get('cache_hits', 0)} cache hits]")
-        say(f"  [{done}/{len(todo)}] {cell.key}: {be.headline(rec)}, "
+        if outcome.retried:
+            extra += f" [ok on attempt {len(outcome.attempt_log)}]"
+        say(f"  [{done}/{len(todo)}] {outcome.cell.key}: {be.headline(rec)}, "
             f"{rec['evaluations']} evals, {rec['search_time_s']:.2f}s"
             f"{extra} | elapsed {elapsed:.1f}s, eta {eta:.0f}s")
 
-    with tracer.span("campaign", backend=be.name, cells=len(cells),
-                     todo=len(todo), workers=workers):
+    with interrupt_scope(install_signal_handlers) as stop, \
+            tracer.span("campaign", backend=be.name, cells=len(cells),
+                        todo=len(todo), workers=workers):
         if workers > 1 and len(todo) > 1:
             # spawn, not fork: callers routinely have JAX (multithreaded)
             # initialized, and forking a threaded parent can deadlock
             # workers.
             ctx = multiprocessing.get_context("spawn")
-            with ProcessPoolExecutor(max_workers=workers,
-                                     mp_context=ctx) as pool:
-                futs = {}
-                for c in todo:
-                    obs = ({"events_dir": str(events_dir),
-                            "t_submit": time.time()} if trace else None)
-                    futs[pool.submit(run_cell_by_backend, be.name, c,
-                                     base_seed, population, iterations,
-                                     weights, obs, searcher,
-                                     searcher_config,
-                                     screen_fits.get(c.key),
-                                     calibration)] = c
-                inflight = len(futs)
-                tracer.gauge("pool.inflight", inflight, workers=workers)
-                for fut in as_completed(futs):
-                    finish(futs[fut], fut.result())
-                    inflight -= 1
-                    tracer.gauge("pool.inflight", inflight, workers=workers)
+
+            def make_pool():
+                return ProcessPoolExecutor(max_workers=workers,
+                                           mp_context=ctx)
+
+            def submit(pool, c, attempt):
+                obs = ({"events_dir": str(events_dir),
+                        "t_submit": time.time()} if trace else None)
+                return pool.submit(run_cell_by_backend, be.name, c,
+                                   base_seed, population, iterations,
+                                   weights, obs, searcher, searcher_config,
+                                   screen_fits.get(c.key), calibration,
+                                   attempt)
+
+            stats = run_resilient_pool(
+                todo, make_pool=make_pool, submit=submit,
+                on_outcome=finish, policy=policy, search=search,
+                backend=be.name, stop=stop, tracer=tracer,
+                workers=workers)
+            pool_rebuilds = stats.rebuilds
+            interrupted = stats.interrupted
         else:
+            def attempt_fn(cell, attempt):
+                with tracer.span("cell.run", cell=cell.key,
+                                 backend=be.name):
+                    with tracer.span("cell.eval", cell=cell.key):
+                        return run_cell_by_backend(
+                            be.name, cell, base_seed, population,
+                            iterations, weights, None, searcher,
+                            searcher_config, screen_fits.get(cell.key),
+                            calibration, attempt)
+
             for c in todo:
-                kw = ({"screen_fits": screen_fits[c.key]}
-                      if c.key in screen_fits else {})
-                with tracer.span("cell.run", cell=c.key, backend=be.name):
-                    with tracer.span("cell.eval", cell=c.key):
-                        rec = be.run_cell(c, base_seed=base_seed,
-                                          population=population,
-                                          iterations=iterations,
-                                          weights=weights,
-                                          searcher=searcher,
-                                          searcher_config=searcher_config,
-                                          calibration=calibration,
-                                          **kw)
-                finish(c, rec)
+                if stop.is_set():
+                    interrupted = True
+                    break
+                outcome = execute_cell(c, attempt_fn, policy,
+                                       search=search, backend=be.name,
+                                       stop=stop, tracer=tracer)
+                interrupted = interrupted or outcome.interrupted
+                finish(outcome)
 
     events_path = trace_json = None
     if trace:
@@ -507,13 +591,24 @@ def run_campaign(cells: Iterable,
         say(f"telemetry: {len(events)} events -> {events_path} "
             f"(chrome trace: {trace_json})")
 
-    records = [store.get(c.key) for c in cells]
+    records = [rec for c in cells
+               if (rec := store.get(c.key)) is not None]
+    failed_total = sum(1 for r in records if not is_ok(r))
+    missing = len(cells) - len(records)
+    if interrupted:
+        say(f"campaign interrupted — {done} of {len(todo)} scheduled "
+            f"cell(s) stored and flushed; re-run the same command to "
+            f"resume from here")
     return CampaignReport(cells, records, reused_cells=len(cells) - len(todo),
-                          new_cells=len(todo), new_evaluations=new_evals,
+                          new_cells=done, new_evaluations=new_evals,
                           wall_time_s=time.perf_counter() - t0, backend=be,
-                          events_path=events_path, trace_path=trace_json)
+                          events_path=events_path, trace_path=trace_json,
+                          failed_cells=failed_total,
+                          retried_cells=retried_now, missing_cells=missing,
+                          pool_rebuilds=pool_rebuilds,
+                          interrupted=interrupted)
 
 
 if __name__ == "__main__":
-    from .cli import main
-    main()
+    from .cli import run
+    raise SystemExit(run())

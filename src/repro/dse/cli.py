@@ -30,6 +30,7 @@ from repro.core.search import searcher_names
 from .backends import (BACKENDS, get_backend, parse_inputs,  # noqa: F401
                        parse_searcher_config, parse_weights)
 from .campaign import CampaignReport, run_campaign
+from .resilience import RetryPolicy
 
 
 def print_report(report: CampaignReport, weights: dict | None,
@@ -116,6 +117,25 @@ def main(argv: list[str] | None = None) -> CampaignReport:
                          "against; its fingerprint joins the stored search "
                          "config, so calibrated and uncalibrated results "
                          "never mix on resume")
+    ap.add_argument("--max-attempts", type=int, default=3,
+                    help="attempts per cell before it is quarantined as a "
+                         "status:failed record (transient failures retry "
+                         "with deterministic seeded backoff; permanent "
+                         "model errors never retry). Default: 3")
+    ap.add_argument("--cell-timeout", type=float, default=None,
+                    metavar="S",
+                    help="per-cell wall-clock deadline in seconds "
+                         "(workers>1 only: a cell past its deadline is "
+                         "charged a timeout attempt and the pool is "
+                         "rebuilt). Default: none")
+    ap.add_argument("--backoff", type=float, default=0.05, metavar="S",
+                    help="base retry backoff in seconds (exponential per "
+                         "attempt, deterministic per-cell jitter). "
+                         "Default: 0.05")
+    ap.add_argument("--retry-failed", action="store_true",
+                    help="re-run cells quarantined by a previous run "
+                         "(by default failed records resume as done so a "
+                         "permanent failure is not re-hit every resume)")
     ap.add_argument("--weights", default="",
                     help="scalarization, e.g. throughput_ips=1,dsp_eff=500 "
                          "(fpga default: throughput only, the paper's "
@@ -150,6 +170,10 @@ def main(argv: list[str] | None = None) -> CampaignReport:
         print(f"calibration: {args.calibration} "
               f"({len(calibration.parts())} part(s), "
               f"fingerprint {calibration.fingerprint()})")
+    policy = RetryPolicy(max_attempts=args.max_attempts,
+                         backoff_s=args.backoff,
+                         cell_timeout_s=args.cell_timeout,
+                         seed=args.seed)
     report = run_campaign(cells, store_path,
                           base_seed=args.seed, population=args.population,
                           iterations=args.iterations, weights=weights,
@@ -160,7 +184,8 @@ def main(argv: list[str] | None = None) -> CampaignReport:
                           searcher_config=parse_searcher_config(
                               args.searcher_config), shard=shard,
                           jax_screen=args.jax_screen,
-                          calibration=calibration)
+                          calibration=calibration, policy=policy,
+                          retry_failed=args.retry_failed)
     front = print_report(report, weights, args.top)
 
     if args.frontier_json:
@@ -171,8 +196,44 @@ def main(argv: list[str] | None = None) -> CampaignReport:
     if report.events_path:
         print(f"events -> {report.events_path}")
         print(f"chrome trace -> {report.trace_path}")
+    if report.partial:
+        print_partial_summary(report, store_path)
     return report
 
 
+def print_partial_summary(report: CampaignReport, store_path) -> None:
+    """The honest-failure epilogue for a partial campaign: what was lost,
+    why, and the exact resume move."""
+    bits = []
+    if report.interrupted:
+        bits.append("interrupted by signal")
+    if report.failed_cells:
+        bits.append(f"{report.failed_cells} cell(s) quarantined")
+    if report.missing_cells:
+        bits.append(f"{report.missing_cells} cell(s) not run")
+    print(f"\n!! partial campaign ({'; '.join(bits)}) — exit code 3")
+    for rec in report.failures():
+        print(f"   FAILED {rec['cell_key']}: {rec['error_type']} "
+              f"after {rec['attempts']} attempt(s)")
+    hint = f"python -m repro.dse.campaign ... --store {store_path}"
+    if report.failed_cells and not report.missing_cells \
+            and not report.interrupted:
+        hint += " --retry-failed"
+    print(f"   resume: re-run the same command ({hint}); completed "
+          f"cells are reused from the store")
+
+
+def exit_code(report: CampaignReport) -> int:
+    """0 for a full campaign, 3 for a partial one (interrupted,
+    quarantined, or missing cells — resumable either way)."""
+    return 3 if report.partial else 0
+
+
+def run(argv: list[str] | None = None) -> int:
+    """CLI entry point with exit-code semantics (``main`` returns the
+    report for programmatic callers)."""
+    return exit_code(main(argv))
+
+
 if __name__ == "__main__":
-    main()
+    raise SystemExit(run())

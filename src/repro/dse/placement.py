@@ -56,7 +56,7 @@ from repro.core.hw_specs import CostEnvelope
 from .backends import BACKENDS, get_backend, record_backend, workload_families
 from .objectives import NORMALIZED_OBJECTIVES
 from .frontier import FrontierIndex
-from .store import CampaignStore, open_store
+from .store import CampaignStore, is_ok, open_store
 
 #: Normalized objective names a placement can maximize.
 PLACEMENT_OBJECTIVES: tuple[str, ...] = tuple(
@@ -219,7 +219,10 @@ def pooled_records(stores: Sequence[CampaignStore | Iterable[Mapping]],
     """Records of several stores merged by cell key, LATER STORES WINNING
     — the same last-wins rule a concatenated JSONL store follows, so a
     resumed or re-run store never double-counts a cell. Stores are
-    streamed (``iter_records``), never materialized."""
+    streamed (``iter_records``), never materialized. Quarantined
+    (``status: failed``) records participate in last-wins — a later
+    success supersedes a failure and vice versa — and are filtered out
+    downstream by ``candidates_by_workload``."""
     merged: dict[str, dict] = {}
     for s in stores:
         recs = s.iter_records() if isinstance(s, CampaignStore) else s
@@ -240,6 +243,8 @@ def candidates_by_workload(records: Sequence[Mapping], objective: str,
                        f"choose from {PLACEMENT_OBJECTIVES}")
     out: dict[str, list[Candidate]] = {}
     for rec in records:
+        if not is_ok(rec):
+            continue  # quarantined (status: failed) — never placeable
         name = record_backend(rec)
         if name not in BACKENDS:
             continue

@@ -61,7 +61,7 @@ from .backends import BACKENDS, get_backend, record_backend
 from .frontier import FrontierIndex
 from .objectives import (NORMALIZED_DEFAULT_WEIGHTS, NORMALIZED_OBJECTIVES,
                          canonical_vector, scalarize_values)
-from .store import open_store
+from .store import open_store, record_status
 
 #: Where reports land unless --out says otherwise.
 DEFAULT_REPORT_DIR = Path("docs/reports")
@@ -117,12 +117,17 @@ class _BackendAcc:
         self.be = get_backend(name) if self.known else None
         self.count = 0
         self.feasible = 0
+        self.failed = 0
         self.fi = FrontierIndex()
         self.winners: dict[str, tuple[float, dict]] = {}
 
     def add(self, rec: Mapping) -> None:
         self.count += 1
-        if not self.known or not rec["objectives"].get("feasible"):
+        if record_status(rec) != "ok":
+            # quarantined cell: counted, never ranked/frontiered
+            self.failed += 1
+            return
+        if not self.known or not rec.get("objectives", {}).get("feasible"):
             return
         be = self.be
         self.fi.insert(self.feasible, be.canonical(rec["objectives"]),
@@ -138,7 +143,9 @@ class _BackendAcc:
     def section(self, k: int) -> list[str]:
         be = self.be
         lines = [f"## Backend `{self.name}` — {self.count} cells, "
-                 f"{self.feasible} feasible", ""]
+                 f"{self.feasible} feasible"
+                 + (f", {self.failed} quarantined" if self.failed else ""),
+                 ""]
         lines += ["Objectives: " + ", ".join(
             f"`{s.name}` ({'max' if s.maximize else 'min'}, {s.units})"
             for s in be.objectives), ""]
@@ -192,6 +199,8 @@ def _norm_row(r: Mapping, label: str | None = None) -> dict | None:
     """One record -> its cross-backend normalized row
     (``{rec, backend, norm, label}``), or ``None`` when the record is
     from an unknown backend, not normalizable, or infeasible."""
+    if record_status(r) != "ok":
+        return None  # quarantined (status: failed) — never ranked/pooled
     name = record_backend(r)
     if name not in BACKENDS:
         return None
@@ -571,9 +580,17 @@ def health_section(records: Sequence[Mapping],
     which workers sat idle (utilization), which cells dominated the run
     (slowest-cell table), and per-cell convergence diagnostics from the
     ``trace`` field — flagging cells that were still improving when the
-    iteration cap hit, i.e. cells whose budget was too small."""
+    iteration cap hit, i.e. cells whose budget was too small.
+
+    ``records`` may mix normal and quarantined (``status: "failed"``)
+    records: failures feed the "Failures & retries" table (exception
+    histogram, per-cell attempt counts, slowest attempts — alongside the
+    ``cells.failed`` / ``cells.retried`` / ``pool.rebuilds`` counters
+    when events are present) and are excluded from every other table."""
     lines = ["## Campaign health", ""]
     events = list(events or [])
+    failed = [r for r in records if record_status(r) != "ok"]
+    records = [r for r in records if record_status(r) == "ok"]
 
     if events:
         wall = campaign_wall(events)
@@ -619,6 +636,51 @@ def health_section(records: Sequence[Mapping],
             lines += _table(["counter", "total"],
                             [[f"`{n}`", f"{v:g}"]
                              for n, v in sorted(counts.items())])
+            lines += [""]
+
+    retried = [r for r in records
+               if isinstance(r.get("resilience"), Mapping)]
+    if failed or retried:
+        lines += [f"### Failures & retries ({len(failed)} quarantined, "
+                  f"{len(retried)} retried-then-ok cell(s))", ""]
+        if failed:
+            hist: dict[str, int] = {}
+            for r in failed:
+                et = str(r.get("error_type", "?"))
+                hist[et] = hist.get(et, 0) + 1
+            lines += _table(["exception", "quarantined cells"],
+                            [[f"`{et}`", n]
+                             for et, n in sorted(hist.items())])
+            lines += [""]
+            rows = []
+            for r in sorted(failed, key=lambda r: r.get("cell_key", "")):
+                log = r.get("attempt_log") or []
+                outcomes = ",".join(str(a.get("outcome", "?"))
+                                    for a in log) or "—"
+                last = (r.get("error") or "").strip().splitlines()
+                rows.append([f"`{r.get('cell_key', '?')}`",
+                             f"`{r.get('error_type', '?')}`",
+                             r.get("attempts", len(log)), outcomes,
+                             last[-1][:80] if last else "—"])
+            lines += _table(["cell", "exception", "attempts", "outcomes",
+                             "last error"], rows)
+            lines += [""]
+        attempts = []
+        for r in failed + retried:
+            log = (r.get("attempt_log")
+                   or r.get("resilience", {}).get("attempt_log") or [])
+            for a in log:
+                attempts.append((float(a.get("duration_s", 0.0)),
+                                 r.get("cell_key", "?"),
+                                 a.get("attempt", "?"),
+                                 a.get("outcome", "?")))
+        attempts.sort(key=lambda t: (-t[0], t[1]))
+        if attempts:
+            lines += [f"### Slowest attempts (top {min(k, len(attempts))} "
+                      f"across failed/retried cells)", ""]
+            lines += _table(["cell", "attempt", "outcome", "duration s"],
+                            [[f"`{c}`", n, o, f"{d:.3f}"]
+                             for d, c, n, o in attempts[:k]])
             lines += [""]
 
     traced = [r for r in records if isinstance(r.get("trace"), Mapping)]
@@ -680,7 +742,7 @@ def health_section(records: Sequence[Mapping],
                       "relaxation; they never touch the full analytical "
                       "models and are not part of `evals`._", ""]
 
-    if not events and not traced:
+    if not events and not traced and not failed:
         lines += ["_No telemetry: the store records carry no `trace` field "
                   "and no events file was found. Re-run the campaign with "
                   "`--trace` to populate both._", ""]
@@ -716,6 +778,7 @@ def render_report(records: Iterable[Mapping], *,
     accs: dict[str, _BackendAcc] = {}
     norm = _NormAcc()
     traced: list[Mapping] = []
+    failures: list[Mapping] = []
     total = 0
     stamped, stamp_fps = 0, set()
     for r in records:
@@ -725,6 +788,11 @@ def render_report(records: Iterable[Mapping], *,
         if acc is None:
             acc = accs[name] = _BackendAcc(name)
         acc.add(r)
+        if record_status(r) != "ok":
+            # quarantined: counted by the accumulator, retained only for
+            # the health section's failure tables
+            failures.append(r)
+            continue
         norm.add_record(r)
         if isinstance(r.get("trace"), Mapping):
             traced.append(r)
@@ -755,9 +823,9 @@ def render_report(records: Iterable[Mapping], *,
                   + ", ".join(f"`{f}`" for f in fps)
                   + " but no calibration file was supplied — rerun with "
                     "`--calibration <file>` to render the error table.", ""]
-    if events or traced:
-        lines += health_section(traced, events, k=min(k, 10) if k > 0
-                                else 10, total=total)
+    if events or traced or failures:
+        lines += health_section(traced + failures, events,
+                                k=min(k, 10) if k > 0 else 10, total=total)
     if bench:
         lines += _bench_section(bench)
     return "\n".join(lines).rstrip() + "\n"
@@ -818,6 +886,42 @@ def fixture_records() -> list[dict]:
                 **({"screened": 4096} if hyperband else {}),
             },
         })
+    # one retried-then-ok cell (index 3) and one quarantined cell so the
+    # health report's "Failures & retries" section renders byte-stably
+    # from the fixture alone — same hand-written-durations discipline as
+    # fixture_events()
+    recs[3]["resilience"] = {
+        "attempts": 2,
+        "retries": 1,
+        "attempt_log": [
+            {"attempt": 1, "outcome": "error", "duration_s": 0.021,
+             "error_type": "RuntimeError"},
+            {"attempt": 2, "outcome": "ok", "duration_s": 0.34,
+             "error_type": None},
+        ],
+    }
+    recs.append({
+        "schema": 1,
+        "status": "failed",
+        "quarantine_schema": 1,
+        "cell_key": "net=alexnet|in=native|fpga=ku115|prec=8|bmax=1",
+        "cell": {"net": "alexnet", "h": 0, "w": 0, "fpga": "ku115",
+                 "precision": 8, "batch_max": 1},
+        "search": {"base_seed": 0, "population": 20, "iterations": 30,
+                   "weights": None},
+        "error_type": "ValueError",
+        "error": "Traceback (most recent call last):\n"
+                 "  ...\n"
+                 "ValueError: injected[raise-permanent] "
+                 "net=alexnet|in=native|fpga=ku115|prec=8|bmax=1 "
+                 "(attempt 1)",
+        "attempts": 1,
+        "attempt_log": [
+            {"attempt": 1, "outcome": "error", "duration_s": 0.012,
+             "error_type": "ValueError"},
+        ],
+        "evaluations": 0,
+    })
     tpu_pts = [  # (arch, shape, chips, remat, mb, dp, tp, step, mfu, hbm, ok)
         ("starcoder2-3b", "train_4k", 8, "full", 2, 8, 1, 18.1, 0.52,
          10.4, True),
@@ -972,7 +1076,8 @@ def main(argv: list[str] | None = None) -> int:
                      "Backend champions", "Campaign health",
                      "Wall-time breakdown", "Worker utilization",
                      "Slowest cells", "Convergence diagnostics",
-                     "Per-engine convergence", "iteration cap"):
+                     "Per-engine convergence", "iteration cap",
+                     "Failures & retries", "Slowest attempts"):
             if must not in md:
                 raise SystemExit(f"selftest: section {must!r} missing "
                                  f"from rendered report")

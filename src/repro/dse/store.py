@@ -57,6 +57,23 @@ MANIFEST_NAME = "manifest.json"
 _SHARD_RE = re.compile(r"^shard-[A-Za-z0-9_.-]+\.jsonl$")
 
 
+def record_status(rec) -> str:
+    """A record's lifecycle status: ``"ok"`` for normal result records
+    (including every pre-resilience record — they carry no ``status``
+    field), ``"failed"`` for quarantined cells
+    (:func:`repro.dse.resilience.quarantine_record`), ``"missing"`` for
+    ``None``. Every frontier/report/placement consumer gates on this so
+    failed records never masquerade as results."""
+    if rec is None:
+        return "missing"
+    return rec.get("status", "ok")
+
+
+def is_ok(rec) -> bool:
+    """True for a normal result record (see :func:`record_status`)."""
+    return rec is not None and rec.get("status", "ok") == "ok"
+
+
 def rav_hash(rav: RAV) -> str:
     """Stable short hash of an RAV (fractions rounded to the PSO's cache
     resolution, so re-discovered designs hash identically)."""
@@ -323,7 +340,7 @@ class CampaignStore:
         fi = FrontierIndex()
         be = get_backend(names[0]) if names else None
         for rec in self.iter_records(backend):
-            if rec["objectives"].get("feasible"):
+            if is_ok(rec) and rec.get("objectives", {}).get("feasible"):
                 fi.insert(rec["cell_key"], be.canonical(rec["objectives"]),
                           payload=rec)
         return fi
@@ -432,11 +449,15 @@ def main(argv: list[str] | None = None) -> int:
                 if s.sharded else "v1 single file")
         per_be = {b: sum(1 for loc in s._index.values() if loc[3] == b)
                   for b in s.backends()}
+        failed = sum(1 for rec in s.iter_records() if not is_ok(rec))
         print(f"{args.store}: {kind}")
         print(f"  records: {len(s)}  backends: "
               + (", ".join(f"{b}={n}" for b, n in per_be.items()) or "-"))
         print(f"  skipped lines: {s.skipped_lines} "
               f"(corrupt: {s.corrupt_lines})")
+        if failed:
+            print(f"  quarantined: {failed} failed record(s) — resume "
+                  f"with --retry-failed to re-run them")
         if s.sharded:
             for f in s._files:
                 size = f.stat().st_size if f.exists() else 0

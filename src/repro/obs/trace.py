@@ -41,6 +41,7 @@ import dataclasses
 import json
 import os
 import time
+import warnings
 from pathlib import Path
 from typing import Iterable, Mapping, Sequence
 
@@ -246,10 +247,13 @@ def worker_tracer(events_dir: str | os.PathLike,
 # ---------------------------------------------------------------------------
 
 
-def load_events(path: str | os.PathLike) -> list[dict]:
+def load_events(path: str | os.PathLike,
+                stats: dict | None = None) -> list[dict]:
     """Events from one JSONL file (blank lines skipped; a torn final
-    line — the only corruption an append-only writer can produce — is
-    dropped, matching the result store's reader)."""
+    line — what an append-only writer leaves behind when its process is
+    killed mid-write — is dropped, matching the result store's reader).
+    Pass a ``stats`` dict to count what was skipped: its
+    ``"skipped_lines"`` entry is incremented per undecodable line."""
     out = []
     p = Path(path)
     if not p.exists():
@@ -262,6 +266,9 @@ def load_events(path: str | os.PathLike) -> list[dict]:
             try:
                 out.append(json.loads(line))
             except json.JSONDecodeError:
+                if stats is not None:
+                    stats["skipped_lines"] = \
+                        stats.get("skipped_lines", 0) + 1
                 continue
     return out
 
@@ -276,9 +283,20 @@ def merge_events(events_dir: str | os.PathLike,
     deterministic event list: sorted by ``(ts, proc, seq)`` — a total
     order (seq is unique per proc), so the merge is independent of
     directory listing order and stable across re-merges. Optionally
-    writes the merged JSONL to ``out_path``."""
+    writes the merged JSONL to ``out_path``.
+
+    A sidecar truncated mid-write (worker killed, disk full) does not
+    poison the merge: undecodable lines are skipped and surfaced as a
+    single ``UserWarning`` with the count, so a crashed campaign's
+    surviving telemetry still renders."""
     files = sorted(Path(events_dir).glob("*.jsonl"))
-    events = [ev for f in files for ev in load_events(f)]
+    stats: dict = {}
+    events = [ev for f in files for ev in load_events(f, stats)]
+    skipped = stats.get("skipped_lines", 0)
+    if skipped:
+        warnings.warn(f"merge_events: skipped {skipped} undecodable "
+                      f"line(s) under {events_dir} (truncated sidecar?)",
+                      stacklevel=2)
     events.sort(key=_merge_key)
     if out_path is not None:
         out = Path(out_path)

@@ -101,9 +101,30 @@ def test_merge_events_is_deterministic(tmp_path):
     keys = [(e["ts"], e["proc"], e["seq"]) for e in m1]
     assert keys == sorted(keys)
     assert {e["proc"] for e in m1} == {"main", "worker-7"}
-    # undecodable sidecar junk is skipped, not fatal
+    # undecodable sidecar junk is skipped (with a warning), not fatal
     (d / "junk.jsonl").write_text("{not json\n\n")
-    assert merge_events(d) == m1
+    with pytest.warns(UserWarning, match="skipped 1 undecodable"):
+        assert merge_events(d) == m1
+
+
+def test_merge_events_tolerates_truncated_sidecar(tmp_path):
+    """A worker killed mid-write (crash fault, SIGKILL) leaves a torn
+    final line in its sidecar; the merge must keep every intact event
+    and surface the loss instead of raising."""
+    d = tmp_path / "ev"
+    with worker_tracer(d, proc="worker-9") as tr:
+        tr.count("a")
+        tr.count("b")
+    sidecar = next(d.glob("*.jsonl"))
+    whole = sidecar.read_text().splitlines()
+    torn = whole[0] + "\n" + whole[1][: len(whole[1]) // 2]
+    sidecar.write_text(torn)                       # no trailing newline
+    stats: dict = {}
+    assert [e["name"] for e in load_events(sidecar, stats)] == ["a"]
+    assert stats == {"skipped_lines": 1}
+    with pytest.warns(UserWarning, match="skipped 1 undecodable"):
+        merged = merge_events(d, tmp_path / "m.jsonl")
+    assert [e["name"] for e in merged] == ["a"]
 
 
 def test_validate_events_flags_bad_shapes():
@@ -289,12 +310,19 @@ def test_health_section_without_any_telemetry():
 def test_render_report_includes_health_only_when_telemetry():
     fix = fixture_records()
     assert "Campaign health" in render_report(fix)  # traces present
-    bare = [dict(r) for r in fix]
+    ok = [r for r in fix if r.get("status", "ok") == "ok"]
+    failed = [r for r in fix if r.get("status") == "failed"]
+    bare = [dict(r) for r in ok]
     for r in bare:
-        r.pop("trace")
+        r.pop("trace", None)
+        r.pop("resilience", None)
     assert "Campaign health" not in render_report(bare)
     assert "Campaign health" in render_report(bare,
                                               events=fixture_events())
+    # a quarantined record alone is telemetry enough — failures must
+    # never drop out of the report silently
+    md = render_report(bare + failed)
+    assert "Campaign health" in md and "Failures & retries" in md
 
 
 def test_committed_example_health_report_is_current():

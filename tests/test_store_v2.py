@@ -8,6 +8,7 @@ report (modulo ``search_time_s`` timing) as one process writing a v1
 file, and a resumed run against either layout reuses every cell.
 """
 import json
+import os
 import warnings
 from pathlib import Path
 
@@ -175,3 +176,101 @@ def test_info_cli(tmp_path, capsys):
     assert store_main(["info", str(p)]) == 0
     out = capsys.readouterr().out
     assert "v1" in out and "1" in out
+
+
+# ---------------------------------------------------------------------------
+# crash consistency
+# ---------------------------------------------------------------------------
+
+_KILLED_WRITER = """
+import json, os, sys, time
+from repro.dse.store import open_store, shard_name, sharded_dir_for
+
+store, sentinel = sys.argv[1], sys.argv[2]
+s = open_store(store, shard=1)
+for i in range(6):
+    s.put({"cell_key": f"k{i}", "v": i})
+# now die mid-append: half a record, flushed, no newline — exactly what
+# SIGKILL/OOM leaves behind
+half = json.dumps({"cell_key": "k-torn", "v": 999})[: 20]
+with (sharded_dir_for(store) / shard_name(1)).open("a") as f:
+    f.write(half)
+    f.flush()
+    os.fsync(f.fileno())
+open(sentinel, "w").write("ready")
+time.sleep(120)       # parent kills us here
+"""
+
+
+def test_sharded_writer_killed_mid_append_heals(tmp_path):
+    """Kill a shard-writer process that died halfway through an append:
+    the torn final line is tolerated silently (not counted corrupt),
+    every completed record survives, and the next writer appends
+    normally."""
+    import subprocess
+    import sys
+    import time
+
+    shared = str(tmp_path / "crash.d")
+    sentinel = tmp_path / "writer-ready"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parents[1] / "src")
+    proc = subprocess.Popen([sys.executable, "-c", _KILLED_WRITER,
+                             shared, str(sentinel)], env=env)
+    try:
+        deadline = time.time() + 60
+        while not sentinel.exists():
+            assert time.time() < deadline, "writer never reached the torn append"
+            assert proc.poll() is None, "writer died early"
+            time.sleep(0.05)
+        proc.kill()
+    finally:
+        proc.wait(timeout=30)
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")         # torn tail must NOT warn
+        survivor = open_store(shared, shard=2)
+    assert survivor.corrupt_lines == 0
+    assert survivor.skipped_lines == 1         # the torn line, dropped
+    assert [r["v"] for r in survivor.iter_records()] == list(range(6))
+    assert survivor.get("k-torn") is None      # partial append re-runs
+    survivor.put({"cell_key": "k-torn", "v": 7})
+    reread = open_store(shared)
+    assert reread.get("k-torn")["v"] == 7
+
+
+def test_mid_file_corruption_counts_and_warns(tmp_path):
+    shared = str(tmp_path / "bad.d")
+    s = open_store(shared, shard=0)
+    for i in range(3):
+        s.put({"cell_key": f"k{i}", "v": i})
+    f = sharded_dir_for(Path(shared)) / shard_name(0)
+    lines = f.read_text().splitlines()
+    lines[1] = lines[1][: len(lines[1]) // 2]     # damage a MIDDLE line
+    f.write_text("\n".join(lines) + "\n")
+    with pytest.warns(RuntimeWarning, match="1 corrupt non-final"):
+        again = open_store(shared)
+    assert again.corrupt_lines == 1
+    assert sorted(r["v"] for r in again.iter_records()) == [0, 2]
+
+
+def test_compact_drops_superseded_quarantine(tmp_path):
+    """A quarantined cell later retried to success: compaction keeps only
+    the last-wins success line — the failure leaves no trace in the
+    compacted store."""
+    from repro.dse.store import is_ok
+
+    shared = str(tmp_path / "q.d")
+    s = open_store(shared, shard=0)
+    s.put({"cell_key": "cell-a", "status": "failed", "quarantine_schema": 1,
+           "error_type": "RuntimeError", "attempts": 3, "evaluations": 0})
+    s.put({"cell_key": "cell-b", "v": 1})
+    s.put({"cell_key": "cell-a", "v": 2,
+           "objectives": {"feasible": True}})    # --retry-failed success
+    fresh = open_store(shared)
+    assert fresh.compact() == 2
+    recs = {r["cell_key"]: r for r in open_store(shared).iter_records()}
+    assert len(recs) == 2
+    assert is_ok(recs["cell-a"]) and recs["cell-a"]["v"] == 2
+    blob = (sharded_dir_for(Path(shared)) / shard_name(0)).read_text()
+    assert '"failed"' not in blob
